@@ -1,0 +1,41 @@
+"""Shared benchmark utilities: result persistence + ASCII tables."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def save_result(name: str, rows: List[Dict], meta: Dict | None = None):
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    payload = {"benchmark": name, "time": time.time(),
+               "meta": meta or {}, "rows": rows}
+    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(payload, indent=2,
+                                                         default=str))
+    return payload
+
+
+def fmt(v, width=12):
+    if v is None:
+        return " " * (width - 1) + "-"
+    if isinstance(v, bool):
+        return f"{str(v):>{width}}"
+    if isinstance(v, float):
+        if v != 0 and (abs(v) >= 1e5 or abs(v) < 1e-3):
+            return f"{v:>{width}.3e}"
+        return f"{v:>{width}.4f}"
+    return f"{str(v):>{width}}"
+
+
+def print_table(title: str, rows: List[Dict], cols: List[str],
+                widths: Dict[str, int] | None = None):
+    widths = widths or {}
+    print(f"\n== {title} ==")
+    header = " ".join(f"{c:>{widths.get(c, 12)}}" for c in cols)
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        print(" ".join(fmt(r.get(c), widths.get(c, 12)) for c in cols))

@@ -1,0 +1,31 @@
+"""Fig 4 — arithmetic-instruction throughput ceilings.
+
+The paper's vadd/vmul/vmacc/vdiv x FP16/32/64, INT8..64 sweep.  TPU column
+= modeled v5e ceiling per op stream; host column = measured XLA:CPU.
+"""
+from __future__ import annotations
+
+from repro.core import microbench
+
+from benchmarks.common import print_table, save_result
+
+
+def run(measure: bool = True):
+    rows = [r.row() for r in microbench.arithmetic_suite(measure=measure)]
+    print_table("Fig 4: arithmetic throughput (Gops/s)",
+                rows, ["name", "dtype", "flops_per_elem",
+                       "model_tpu_gops", "host_gops"],
+                widths={"name": 8, "dtype": 10})
+    print("-> paper: vfmacc hits peak (57.5 Gops FP16, halving per width); "
+          "vdiv ~30x slower.  Model shows the same structure: fma at the "
+          "MXU/VPU peak per dtype, div dominated by the slow path.")
+    mem_rows = [r.row() for r in microbench.memory_suite(measure=measure)]
+    print_table("Fig 4b: memory-pattern throughput (Gelem/s)",
+                mem_rows, ["name", "bytes_per_elem", "model_tpu_gops",
+                           "host_gops"],
+                widths={"name": 26})
+    return save_result("fig4_arith", rows + mem_rows)
+
+
+if __name__ == "__main__":
+    run()

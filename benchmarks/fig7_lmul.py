@@ -1,0 +1,78 @@
+"""Fig 7 — the LMUL (block-multiplier) sweep.
+
+Two sections:
+  (a) cost-model sweep of the Pallas kernels' block multiplier {1,2,4,8}
+      (gemm / stream / flash) — shows the LMUL=8 VMEM-spill cliff and
+      that the autotuner's choice ("compiler default") is ~optimal;
+  (b) real host-measured sweep of the reference attention's kv-chunk size
+      (the jnp-path block knob) — measured analogue on this machine.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune
+from repro.models.attention import chunked_attention
+
+from benchmarks.common import print_table, save_result
+
+
+def _host_time(fn, *args, iters=3):
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jfn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(measure: bool = True):
+    rows = []
+    shapes = {
+        "gemm 4096^3 bf16": autotune.gemm_shape(4096, 4096, 4096, bk=512),
+        "gemm 8k^3 bk=2048": autotune.gemm_shape(8192, 8192, 8192, bk=2048),
+        "stream 16M": autotune.stream_shape(1 << 24),
+        "flash S=8192 H=128": autotune.flash_shape(8192, 128),
+    }
+    for name, ks in shapes.items():
+        best, reports = autotune.select_multiplier(ks)
+        for r in reports:
+            rows.append({
+                "kernel": name, "multiplier": r.multiplier,
+                "working_set_mb": r.working_set / 2 ** 20,
+                "predicted_ms": r.predicted_s * 1e3,
+                "bound": r.bound, "fits_vmem": r.fits_vmem,
+                "selected": r.multiplier == best,
+            })
+    print_table("Fig 7a: block-multiplier (LMUL) sweep — cost model",
+                rows, ["kernel", "multiplier", "working_set_mb",
+                       "predicted_ms", "bound", "fits_vmem", "selected"],
+                widths={"kernel": 20, "bound": 11})
+
+    chunk_rows = []
+    if measure:
+        B, S, NQ, NKV, H = 1, 2048, 4, 2, 64
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (B, S, NQ, H), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, NKV, H), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, NKV, H), jnp.float32)
+        for chunk in (128, 256, 512, 1024, 2048):
+            t = _host_time(
+                lambda q, k, v, c=chunk: chunked_attention(
+                    q, k, v, causal=True, kv_chunk=c), q, k, v)
+            chunk_rows.append({"kv_chunk": chunk, "host_ms": t * 1e3})
+        print_table("Fig 7b: reference-attention kv-chunk sweep (host)",
+                    chunk_rows, ["kv_chunk", "host_ms"])
+    print("-> paper: default LMUL ~ optimal; LMUL=8 falls off a register-"
+          "spill cliff.  Model: multiplier 2-4 wins, 8 loses exactly when "
+          "the working set exceeds VMEM (fits_vmem=False).")
+    return save_result("fig7_lmul", rows + chunk_rows)
+
+
+if __name__ == "__main__":
+    run()

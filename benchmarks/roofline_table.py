@@ -1,0 +1,76 @@
+"""§Roofline — assemble the per-(arch x shape x mesh) roofline table from
+the dry-run JSONs (launch/dryrun.py must have run first).
+
+Per cell: the three terms (compute / memory / collective, seconds), the
+dominant bound, MODEL_FLOPS = 6·N·D (or 2·N·D inference), the useful-FLOPs
+ratio, and the per-device state bytes.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List
+
+from benchmarks.common import print_table, save_result
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "pod16x16", variant: str = "baseline"
+               ) -> List[Dict]:
+    rows = []
+    for p in sorted(DRYRUN_DIR.glob(f"*__{mesh}__{variant}.json")):
+        d = json.loads(p.read_text())
+        if not d.get("runnable", True):
+            rows.append({
+                "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+                "bound": "SKIPPED", "note": d.get("skip_reason", "")[:60],
+            })
+            continue
+        if "error" in d:
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "mesh": d["mesh"], "bound": "ERROR",
+                         "note": d["error"][:60]})
+            continue
+        t = d["roofline"]
+        a = d["analytic"]
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "mesh": d["mesh"],
+            "variant": d.get("variant", "baseline"),
+            "t_compute_s": t["t_compute_s"],
+            "t_memory_s": t["t_memory_s"],
+            "t_collective_s": t["t_collective_s"],
+            "bound": t["bound"],
+            "useful_flops_ratio": a["useful_flops_ratio"],
+            "state_gib_per_dev": d["memory"].get(
+                "state_bytes_per_device", 0) / 2 ** 30,
+            "collective_gib_per_dev": d["collectives"]
+            ["link_bytes_per_device"] / 2 ** 30,
+            "n_collectives": d["collectives"]["count"],
+        })
+    return rows
+
+
+def run(measure: bool = False):
+    out = {}
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = load_cells(mesh)
+        if not rows:
+            print(f"[roofline] no dry-run results for {mesh} — run "
+                  "`python -m repro.launch.dryrun --all` first")
+            continue
+        print_table(
+            f"Roofline baseline — {mesh}",
+            rows, ["arch", "shape", "t_compute_s", "t_memory_s",
+                   "t_collective_s", "bound", "useful_flops_ratio",
+                   "state_gib_per_dev", "collective_gib_per_dev"],
+            widths={"arch": 22, "shape": 12, "bound": 10,
+                    "useful_flops_ratio": 18, "state_gib_per_dev": 17,
+                    "collective_gib_per_dev": 22})
+        out[mesh] = rows
+        save_result(f"roofline_{mesh}", rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

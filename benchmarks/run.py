@@ -1,0 +1,68 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig5] [--no-measure]
+
+Order mirrors the paper: counter calibration (Table 1), instruction-level
+microbenchmarks (Figs 2-4), compiler-vs-kernel proxy apps (Figs 5-6), the
+LMUL/block sweep (Figs 7-8), Qsim (Fig 9), then the roofline table from
+the dry-run artifacts.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    fig2_strided,
+    fig3_tail,
+    fig4_arith,
+    fig5_proxyapps,
+    fig6_breakdown,
+    fig7_lmul,
+    fig8_pressure,
+    fig9_qsim,
+    roofline_table,
+    table1_counters,
+)
+
+BENCHMARKS = [
+    ("table1_counters", table1_counters),
+    ("fig2_strided", fig2_strided),
+    ("fig3_tail", fig3_tail),
+    ("fig4_arith", fig4_arith),
+    ("fig5_proxyapps", fig5_proxyapps),
+    ("fig6_breakdown", fig6_breakdown),
+    ("fig7_lmul", fig7_lmul),
+    ("fig8_pressure", fig8_pressure),
+    ("fig9_qsim", fig9_qsim),
+    ("roofline", roofline_table),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--no-measure", action="store_true")
+    args = ap.parse_args()
+
+    failures = []
+    for name, mod in BENCHMARKS:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n{'=' * 72}\nrunning {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            mod.run(measure=not args.no_measure)
+            print(f"[{name}] done in {time.time() - t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures.append(name)
+            print(f"[{name}] FAILED: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nall benchmarks complete; JSON in benchmarks/results/")
+
+
+if __name__ == "__main__":
+    main()

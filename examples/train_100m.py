@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-parameter dense LM for a few hundred
+steps on CPU with the full production stack — sharded train step, fault-
+tolerant trainer (checkpoint/auto-resume), synthetic data pipeline, LR
+schedule, and metrics logging.
+
+  PYTHONPATH=src python examples/train_100m.py --steps 300
+
+(The model is a scaled-down qwen3-family config: ~100M params.  On a real
+pod the same driver takes --arch qwen3-4b and the production mesh.)
+"""
+import argparse
+import json
+import pathlib
+
+import jax
+
+from repro.configs import get_config
+from repro.data import SyntheticLMStream
+from repro.models import build_model
+from repro.optim import AdamWConfig, warmup_cosine
+from repro.train import init_train_state, make_train_step
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_100m")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+
+    # ~100M params: 12 layers x d512 (GQA 8/4) + 50k vocab
+    cfg = get_config(
+        "qwen3-1.7b",
+        n_layers=12, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+        d_ff=2048, vocab_size=50_304, param_dtype="float32",
+        compute_dtype="float32", remat="none")
+    total, _ = cfg.param_counts()
+    print(f"training {total/1e6:.1f}M-param {cfg.arch_id}-family model "
+          f"for {args.steps} steps")
+
+    model = build_model(cfg)
+    opt = AdamWConfig(
+        lr=warmup_cosine(3e-4, warmup_steps=50, total_steps=args.steps),
+        weight_decay=0.1, grad_clip_norm=1.0)
+    step = jax.jit(make_train_step(model, opt,
+                                   microbatches=args.microbatches))
+    stream = SyntheticLMStream(cfg, args.batch, args.seq)
+
+    trainer = Trainer(
+        step,
+        lambda: init_train_state(model, jax.random.key(0), opt),
+        stream, args.ckpt_dir,
+        TrainerConfig(total_steps=args.steps, checkpoint_every=50,
+                      async_checkpoint=True))
+    out = trainer.run()
+    losses = [r["loss"] for r in out["log"]]
+    print(f"loss: first10={sum(losses[:10])/10:.4f} "
+          f"last10={sum(losses[-10:])/10:.4f}")
+    print(f"stragglers flagged: {len(out['stragglers'])}")
+    log_path = pathlib.Path(args.ckpt_dir) / "metrics.json"
+    log_path.write_text(json.dumps(out["log"]))
+    print(f"metrics -> {log_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: F401
+from repro.checkpoint.elastic import restore_resharded  # noqa: F401

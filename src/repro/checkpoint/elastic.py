@@ -1,0 +1,29 @@
+"""Elastic restore: move a checkpoint onto a different mesh shape.
+
+Checkpoints store unsharded arrays, so resharding is a device_put with the
+target mesh's NamedShardings (resolved from the same logical-axis specs the
+training job uses).  This is the restart path when the fleet grows or
+shrinks: save on (data=16, model=16), resume on (data=8, model=16), etc.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.parallel.axes import Rules, tree_shardings
+
+
+def restore_resharded(ckpt: Checkpointer, step: int, like, spec_tree,
+                      mesh, rules: Optional[Rules] = None):
+    """Restore ``step`` and place every leaf per (spec_tree, mesh)."""
+    state, manifest = ckpt.restore(step, like=like)
+    sds = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    shardings = tree_shardings(spec_tree, sds, mesh, rules)
+    flat_s, tdef = jax.tree.flatten(state)
+    flat_sh = jax.tree.leaves(
+        shardings, is_leaf=lambda x: hasattr(x, "shard_shape"))
+    placed = [jax.device_put(a, sh) for a, sh in zip(flat_s, flat_sh)]
+    return jax.tree.unflatten(tdef, placed), manifest

@@ -1,0 +1,112 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``--arch <id>``."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.configs.shapes import SHAPES, SHAPES_BY_NAME, ShapeSpec, shape_applicable
+
+from repro.configs import (  # noqa: E402
+    jamba_v0_1_52b,
+    whisper_base,
+    phi3_5_moe_42b,
+    grok_1_314b,
+    qwen3_4b,
+    phi3_medium_14b,
+    granite_3_2b,
+    qwen3_1_7b,
+    llama_3_2_vision_90b,
+    mamba2_780m,
+)
+
+_MODULES = [
+    jamba_v0_1_52b,
+    whisper_base,
+    phi3_5_moe_42b,
+    grok_1_314b,
+    qwen3_4b,
+    phi3_medium_14b,
+    granite_3_2b,
+    qwen3_1_7b,
+    llama_3_2_vision_90b,
+    mamba2_780m,
+]
+
+REGISTRY: Dict[str, ModelConfig] = {m.CONFIG.arch_id: m.CONFIG for m in _MODULES}
+ARCH_IDS: List[str] = list(REGISTRY.keys())
+
+
+def get_config(arch_id: str, **overrides) -> ModelConfig:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    cfg = REGISTRY[arch_id]
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def reduced_config(arch_id: str, **overrides) -> ModelConfig:
+    """A tiny same-family config for CPU smoke tests: few layers, narrow
+    widths, small vocab — preserving every structural feature (GQA ratios,
+    MoE top-k, hybrid periods, qk-norm, enc-dec, cross-attn)."""
+    cfg = REGISTRY[arch_id]
+    kw = dict(
+        n_layers=min(cfg.n_layers, cfg.attn_period or 4),
+        d_model=128,
+        d_ff=0 if cfg.d_ff == 0 else 256,
+        vocab_size=512,
+        head_dim=32,
+        vocab_pad_multiple=64,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat="none",
+        rope_theta=cfg.rope_theta,
+    )
+    if cfg.n_heads:
+        # keep the GQA ratio (scaled down) but stay >= 1
+        kw["n_heads"] = 4
+        kw["n_kv_heads"] = max(1, 4 * cfg.n_kv_heads // cfg.n_heads)
+    if cfg.family == "hybrid":
+        kw["n_layers"] = cfg.attn_period  # one full period
+    if cfg.moe is not None:
+        # capacity_factor = E makes the reduced config dropless so the
+        # prefill/decode == train-forward invariant holds exactly.
+        kw["moe"] = MoEConfig(
+            num_experts=min(cfg.moe.num_experts, 4),
+            top_k=cfg.moe.top_k,
+            expert_d_ff=256,
+            capacity_factor=float(min(cfg.moe.num_experts, 4)),
+        )
+    if cfg.ssm is not None:
+        kw["ssm"] = SSMConfig(
+            d_state=16,
+            head_dim=16,
+            expand=cfg.ssm.expand,
+            conv_kernel=cfg.ssm.conv_kernel,
+            chunk_size=16,
+        )
+    if cfg.n_encoder_layers:
+        kw["n_encoder_layers"] = 2
+        kw["n_layers"] = 2
+        kw["n_audio_ctx"] = 24
+    if cfg.cross_attn_period:
+        kw["n_layers"] = cfg.cross_attn_period  # one period incl. cross layer
+        kw["num_image_tokens"] = 16
+    kw.update(overrides)
+    return dataclasses.replace(cfg, **kw)
+
+
+__all__ = [
+    "ModelConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "REGISTRY",
+    "ARCH_IDS",
+    "get_config",
+    "reduced_config",
+    "SHAPES",
+    "SHAPES_BY_NAME",
+    "ShapeSpec",
+    "shape_applicable",
+]

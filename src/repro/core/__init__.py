@@ -1,0 +1,9 @@
+"""The paper's contribution as a library: the portable-performance layer.
+
+  microbench — C1: instruction-level microbenchmark suite (ceilings)
+  counters   — C2: cost-model channel calibration (Table-1 methodology)
+  costmodel  — calibrated analytic roofline model (TPU v5e)
+  hlo        — HLO op histogram + collective-traffic parsing
+  autotune   — C4: block-multiplier ("LMUL") selection for Pallas kernels
+  veceval    — C4/C5: scalar vs XLA-autovec vs Pallas comparison harness
+"""

@@ -1,0 +1,104 @@
+"""C4: block-multiplier ("LMUL") selection for Pallas kernels.
+
+RVV's LMUL trades elements-per-instruction against register pressure; the
+TPU analogue trades VMEM tile size against:
+  * grid overhead + pipeline ramp (favors LARGE tiles),
+  * VMEM capacity: when the per-step working set exceeds the VMEM budget
+    the pipeline loses double-buffering and ultimately spills — the cliff
+    the paper sees at LMUL=8 (Fig 7).
+
+``select_multiplier`` is a pure cost-model decision (no hardware needed):
+for each multiplier it computes the working set from the kernel's block
+shapes and predicts the bound term; benchmarks/fig7 then sweeps the real
+(host-measured) kernels to validate that "default ≈ optimal" transfers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Tuple
+
+from repro.core.costmodel import TPU_V5E, HWSpec
+from repro.kernels.common import MXU, SUBLANE, VALID_MULTIPLIERS
+
+
+@dataclasses.dataclass
+class KernelShape:
+    """Per-grid-step footprint of a kernel at multiplier 1."""
+    name: str
+    base_block_bytes: float        # VMEM bytes of all blocks at m=1
+    block_scaling: float           # exponent: bytes ~ m**scaling (1 or 2)
+    flops_per_step: float          # at m=1
+    hbm_bytes_per_step: float      # at m=1
+    grid_steps: int                # at m=1
+
+
+@dataclasses.dataclass
+class TuneReport:
+    multiplier: int
+    working_set: float
+    predicted_s: float
+    bound: str
+    fits_vmem: bool
+
+
+GRID_STEP_OVERHEAD_S = 1.5e-6      # DMA issue + scalar-core loop bookkeeping
+
+
+def predict(ks: KernelShape, m: int, hw: HWSpec = TPU_V5E) -> TuneReport:
+    ws = ks.base_block_bytes * (m ** ks.block_scaling)
+    steps = max(1, ks.grid_steps // (m ** ks.block_scaling))
+    flops = ks.flops_per_step * (m ** ks.block_scaling)
+    bytes_ = ks.hbm_bytes_per_step * (m ** ks.block_scaling)
+    t_compute = flops / hw.peak_flops_bf16
+    t_mem = bytes_ / hw.hbm_bw
+    # VMEM penalty: need 2x (double buffering); >budget means serialization
+    fits = 2 * ws <= hw.vmem_bytes
+    penalty = 1.0 if fits else (2 * ws / hw.vmem_bytes)
+    t_step = max(t_compute, t_mem) * penalty + GRID_STEP_OVERHEAD_S
+    bound = "compute" if t_compute >= t_mem else "memory"
+    if not fits:
+        bound = "vmem-spill"
+    return TuneReport(m, ws, t_step * steps, bound, fits)
+
+
+def select_multiplier(ks: KernelShape,
+                      hw: HWSpec = TPU_V5E) -> Tuple[int, List[TuneReport]]:
+    reports = [predict(ks, m, hw) for m in VALID_MULTIPLIERS]
+    best = min(reports, key=lambda r: r.predicted_s)
+    return best.multiplier, reports
+
+
+# -- footprint builders for the shipped kernels -----------------------------
+def gemm_shape(M: int, K: int, N: int, bk: int = 512,
+               dtype_bytes: int = 2) -> KernelShape:
+    bm = bn = MXU
+    bk = min(bk, K)
+    base = (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4  # A + B + acc
+    steps = (M // bm) * (N // bn) * (K // bk)
+    return KernelShape(
+        name="gemm", base_block_bytes=base, block_scaling=2,
+        flops_per_step=2.0 * bm * bn * bk,
+        hbm_bytes_per_step=(bm * bk + bk * bn) * dtype_bytes,
+        grid_steps=steps)
+
+
+def stream_shape(n_elems: int, dtype_bytes: int = 4,
+                 n_arrays: int = 3) -> KernelShape:
+    br = SUBLANE
+    base = n_arrays * br * 128 * dtype_bytes
+    return KernelShape(
+        name="stream", base_block_bytes=base, block_scaling=1,
+        flops_per_step=br * 128 * 2,
+        hbm_bytes_per_step=base,
+        grid_steps=n_elems // (br * 128))
+
+
+def flash_shape(S: int, H: int, dtype_bytes: int = 2,
+                block: int = 512) -> KernelShape:
+    base = (block * H * 3) * dtype_bytes + block * block * 4 + block * H * 4
+    steps = (S // block) ** 2 // 2
+    return KernelShape(
+        name="flash_attention", base_block_bytes=base, block_scaling=2,
+        flops_per_step=4.0 * block * block * H,
+        hbm_bytes_per_step=2 * block * H * dtype_bytes,
+        grid_steps=max(steps, 1))

@@ -1,0 +1,167 @@
+"""HLO text analysis: op histograms ("retired-instruction mix") and
+collective-traffic accounting.
+
+This is the TPU analogue of the paper's perf-counter layer: XLA does not
+report collective bytes in ``cost_analysis()``, so we parse the compiled
+module text, build a symbol table of result shapes, and apply a ring-model
+byte count per collective op (§Roofline).  The op histogram is the
+"instruction mix" used by the Fig-6 breakdown benchmark.
+
+Known counter caveats (calibrated in core/counters.py, Table-1 style):
+  * ops inside ``while`` bodies (lax.scan) are counted ONCE by
+    HloCostAnalysis — the analogue of the paper's unreliable "vector ins"
+    counter; roofline FLOPs therefore come from the analytic model.
+  * "bytes accessed" counts every producer/consumer pair even when fused
+    into one VMEM-resident kernel — an upper bound on HBM traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+# `[ROOT ]%name = <type> <opcode>(...)` — type is a parenthesized tuple or a
+# single whitespace-free token; opcode is the lowercase word before '('.
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(\([^)]*\)|\S+)\s+"
+    r"([a-z][a-z0-9\-]*)\(")
+_REPLICA_RE = re.compile(r"replica_groups=\{?\{([0-9,]+)\}")
+_REPLICA_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-gather-start", "all-reduce-start",
+    "collective-permute-start",
+)
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO result type (sums tuple elements)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    opcode: str
+    result_bytes: int
+    group_size: int
+    line: str
+
+    @property
+    def link_bytes(self) -> float:
+        """Per-device bytes crossing links (ring model)."""
+        n = max(self.group_size, 1)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if self.opcode.startswith("all-reduce"):
+            return 2 * self.result_bytes * frac
+        if self.opcode.startswith("reduce-scatter"):
+            # result is the scattered shard; ring moves input≈result*n once
+            return self.result_bytes * (n - 1)
+        if self.opcode.startswith("all-gather"):
+            return self.result_bytes * frac
+        if self.opcode.startswith("all-to-all"):
+            return self.result_bytes * frac
+        if self.opcode.startswith("collective-permute"):
+            return self.result_bytes
+        return self.result_bytes
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _REPLICA_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _REPLICA_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+@dataclasses.dataclass
+class HloReport:
+    op_histogram: Dict[str, int]
+    collectives: List[CollectiveOp]
+    while_bodies: int
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(c.link_bytes for c in self.collectives)
+
+    def collective_breakdown(self) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for c in self.collectives:
+            key = c.opcode.replace("-start", "")
+            out[key] = out.get(key, 0.0) + c.link_bytes
+        return out
+
+
+def analyze_hlo(text: str, total_devices: int = 1) -> HloReport:
+    hist: Counter = Counter()
+    colls: List[CollectiveOp] = []
+    n_while = 0
+    for line in text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        _, type_str, opcode = m.groups()
+        hist[opcode] += 1
+        if opcode == "while":
+            n_while += 1
+        if opcode in COLLECTIVES:
+            colls.append(CollectiveOp(
+                opcode=opcode,
+                result_bytes=shape_bytes(type_str),
+                group_size=_group_size(line, total_devices),
+                line=line.strip()[:200],
+            ))
+    return HloReport(op_histogram=dict(hist), collectives=colls,
+                     while_bodies=n_while)
+
+
+def instruction_classes(hist: Dict[str, int]) -> Dict[str, int]:
+    """Bucket the op histogram into the paper's Fig-6 classes."""
+    buckets = {"matmul": 0, "elementwise": 0, "memory_movement": 0,
+               "collective": 0, "control": 0, "other": 0}
+    ew = {"add", "subtract", "multiply", "divide", "exponential", "tanh",
+          "maximum", "minimum", "select", "compare", "rsqrt", "sqrt",
+          "negate", "convert", "log", "power", "and", "or", "not", "abs",
+          "clamp", "floor", "sign", "cosine", "sine", "logistic"}
+    mem = {"copy", "reshape", "transpose", "broadcast", "slice",
+           "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+           "concatenate", "pad", "reverse", "iota", "constant", "parameter",
+           "tuple", "get-tuple-element", "bitcast", "copy-start", "copy-done"}
+    for op, n in hist.items():
+        if op in ("dot", "convolution"):
+            buckets["matmul"] += n
+        elif any(op.startswith(c) for c in COLLECTIVES):
+            buckets["collective"] += n
+        elif op in ew:
+            buckets["elementwise"] += n
+        elif op in mem:
+            buckets["memory_movement"] += n
+        elif op in ("while", "conditional", "call", "fusion", "custom-call",
+                    "reduce", "sort"):
+            buckets["control"] += n
+        else:
+            buckets["other"] += n
+    return buckets

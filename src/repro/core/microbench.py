@@ -1,0 +1,141 @@
+"""C1: the microbenchmark suite — performance ceilings per op class.
+
+The paper issues controlled RVV instruction sequences and measures Gops/s.
+On this CPU-hosted target we report two columns per benchmark:
+
+  * ``model_tpu_gops``  — the TPU-v5e roofline ceiling for that op stream
+    (min of the compute and bandwidth bound) from core.costmodel constants;
+    this is the number the §Roofline analysis uses.
+  * ``host_gops``       — real measured throughput of the XLA:CPU-compiled
+    jnp equivalent (the paper's measured column, on the host ISA).
+
+Arithmetic rows: add/mul/fma/div/exp x {f32, bf16, i32, i8}.
+Memory rows: unit-stride copy/triad, strided (2..8), masked-vs-exact tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costmodel import TPU_V5E, HWSpec
+
+
+@dataclasses.dataclass
+class BenchRecord:
+    name: str
+    dtype: str
+    flops_per_elem: float
+    bytes_per_elem: float
+    model_tpu_gops: float
+    host_gops: Optional[float] = None
+    note: str = ""
+
+    def row(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def _model_ceiling(flops_per_elem, bytes_per_elem, dtype,
+                   hw: HWSpec = TPU_V5E) -> float:
+    """Gops/s ceiling = min(compute, bandwidth) per element stream."""
+    # v5e MXU/VPU peak scales with dtype width for VPU ops
+    peak = hw.peak_flops_bf16
+    if dtype in ("float32", "int32"):
+        peak = peak / 2
+    if dtype == "int8":
+        peak = peak * 2
+    compute_gops = peak / max(flops_per_elem, 1e-9) / 1e9
+    mem_gops = hw.hbm_bw / max(bytes_per_elem, 1e-9) / 1e9
+    # ops here = elements processed per second
+    return min(compute_gops * max(flops_per_elem, 1), mem_gops)
+
+
+def _time_host(fn: Callable, *args, iters: int = 5) -> float:
+    jfn = jax.jit(fn)
+    out = jfn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jfn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "int32": jnp.int32, "int8": jnp.int8}
+
+_ARITH = {
+    "add": (lambda x, y: x + y, 1),
+    "mul": (lambda x, y: x * y, 1),
+    "fma": (lambda x, y: x * y + x, 2),
+    "div": (lambda x, y: x / jnp.maximum(y, 1), 10),   # divider latency proxy
+}
+
+
+def arithmetic_suite(n: int = 1 << 20, measure: bool = True
+                     ) -> List[BenchRecord]:
+    recs = []
+    for dname, dt in _DTYPES.items():
+        if dt == jnp.int8:
+            x = jnp.ones((n,), dt)
+            y = jnp.ones((n,), dt)
+        else:
+            x = jnp.asarray(np.random.default_rng(0).random(n), dt)
+            y = jnp.asarray(np.random.default_rng(1).random(n) + 1, dt)
+        for opname, (fn, flops) in _ARITH.items():
+            if dt in (jnp.int8, jnp.int32) and opname == "div":
+                continue
+            bytes_pe = 3 * jnp.dtype(dt).itemsize
+            rec = BenchRecord(
+                name=f"v{opname}", dtype=dname, flops_per_elem=flops,
+                bytes_per_elem=bytes_pe,
+                model_tpu_gops=_model_ceiling(flops, bytes_pe, dname))
+            if measure:
+                t = _time_host(fn, x, y)
+                rec.host_gops = n * flops / t / 1e9
+            recs.append(rec)
+    return recs
+
+
+def memory_suite(rows: int = 1 << 13, measure: bool = True
+                 ) -> List[BenchRecord]:
+    """Unit-stride / strided / masked access patterns (Fig 2/3 inputs)."""
+    recs = []
+    lane = 128
+    x = jnp.asarray(np.random.default_rng(2).random((rows, lane)),
+                    jnp.float32)
+    y = jnp.asarray(np.random.default_rng(3).random((rows, lane)),
+                    jnp.float32)
+    n = rows * lane
+
+    def add_rec(name, fn, args, out_elems, bytes_pe, note=""):
+        rec = BenchRecord(name=name, dtype="float32", flops_per_elem=0,
+                          bytes_per_elem=bytes_pe,
+                          model_tpu_gops=TPU_V5E.hbm_bw / bytes_pe / 1e9,
+                          note=note)
+        if measure:
+            t = _time_host(fn, *args)
+            rec.host_gops = out_elems / t / 1e9
+        recs.append(rec)
+
+    add_rec("vle (unit-stride copy)", lambda x: x + 0, (x,), n, 8)
+    add_rec("triad", lambda x, y: x + 2.0 * y, (x, y), n, 12)
+    for s in (2, 4, 8):
+        add_rec(f"vlse stride={s}", lambda x, s=s: x[::s] + 0, (x,),
+                n // s, 8 * s,
+                note="strided rows: transfers move s-x the useful bytes")
+        add_rec(f"vle+mask stride={s}",
+                lambda x, s=s: jnp.where(
+                    (jnp.arange(rows) % s == 0)[:, None], x, 0.0)[::1],
+                (x,), n // s, 8 * s,
+                note="overfetch-and-select idiom")
+    return recs
+
+
+def run_suite(measure: bool = True) -> List[Dict]:
+    return [r.row() for r in
+            arithmetic_suite(measure=measure) + memory_suite(measure=measure)]

@@ -1,0 +1,286 @@
+"""C4/C5: the scalar / autovec / kernel comparison harness over the six
+proxy applications (paper §5, Figs 5-6).
+
+Version mapping (DESIGN.md §2):
+  scalar   — fori_loop over the leading output dim, one row per iteration:
+             the "-fno-tree-vectorize" analogue (defeats wide fusion and
+             batched execution the way scalar issue defeats vector lanes).
+  autovec  — idiomatic jnp, fully fused/vectorized by XLA (the compiler).
+  kernel   — the hand Pallas kernel (the "RVV intrinsics" column).  Host
+             timing uses interpret mode and is NOT comparable, so the
+             kernel column reports the TPU cost-model time; the measured
+             host comparison is scalar-vs-autovec (both native XLA:CPU).
+
+Per version we record: host wall time, cost_analysis flops/bytes, the HLO
+op histogram ("retired instructions"), and the instruction-reduction ratio
+vs scalar — the paper's Fig-5b predictor.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hlo as hlo_lib
+from repro.core.costmodel import TPU_V5E
+
+
+@dataclasses.dataclass
+class AppVersion:
+    name: str                      # scalar | autovec | kernel
+    fn: Callable
+    args: tuple
+    tpu_model_s: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ProxyApp:
+    name: str
+    versions: List[AppVersion]
+    flops: float                   # useful flops of the task
+    bytes_moved: float             # useful bytes of the task
+
+
+def _rng(i):
+    return np.random.default_rng(i)
+
+
+# ---------------------------------------------------------------------------
+# the six proxy apps
+# ---------------------------------------------------------------------------
+def build_stream(n: int = 1 << 21) -> ProxyApp:
+    x = jnp.asarray(_rng(0).random(n), jnp.float32)
+    y = jnp.asarray(_rng(1).random(n), jnp.float32)
+
+    def autovec(x, y):
+        return x + 2.0 * y
+
+    def scalar(x, y):
+        rows = x.reshape(-1, 128)
+        yr = y.reshape(-1, 128)
+
+        def body(i, acc):
+            return acc.at[i].set(rows[i] + 2.0 * yr[i])
+
+        return jax.lax.fori_loop(0, rows.shape[0], body,
+                                 jnp.zeros_like(rows)).reshape(-1)
+
+    def kernel(x, y):
+        from repro.kernels.stream import ops as so
+        return so.stream("triad", x.reshape(-1, 128), y.reshape(-1, 128))
+
+    fl, by = n * 2.0, n * 12.0
+    return ProxyApp("stream", [
+        AppVersion("scalar", scalar, (x, y)),
+        AppVersion("autovec", autovec, (x, y)),
+        AppVersion("kernel", kernel, (x, y),
+                   tpu_model_s=max(fl / TPU_V5E.peak_flops_bf16,
+                                   by / TPU_V5E.hbm_bw)),
+    ], flops=fl, bytes_moved=by)
+
+
+def build_spmv(rows: int = 1 << 14, cols: int = 1 << 14,
+               nnz: int = 16) -> ProxyApp:
+    from repro.kernels.spmv import ref as spmv_ref
+    vals_np, cols_np = spmv_ref.random_ell(4, rows, cols, nnz)
+    vals, colsj = jnp.asarray(vals_np), jnp.asarray(cols_np)
+    x = jnp.asarray(_rng(5).random(cols), jnp.float32)
+
+    def autovec(vals, colsj, x):
+        return jnp.sum(vals * x[colsj], axis=-1)
+
+    def scalar(vals, colsj, x):
+        def body(i, acc):
+            return acc.at[i].set(jnp.sum(vals[i] * x[colsj[i]]))
+
+        return jax.lax.fori_loop(0, vals.shape[0], body,
+                                 jnp.zeros((rows,), jnp.float32))
+
+    def kernel(vals, colsj, x):
+        from repro.kernels.spmv import ops as so
+        return so.spmv_ell(vals, colsj, x, idiom="take")[:, 0]
+
+    fl = rows * nnz * 2.0
+    by = rows * nnz * 8.0 + cols * 4.0
+    return ProxyApp("spmv", [
+        AppVersion("scalar", scalar, (vals, colsj, x)),
+        AppVersion("autovec", autovec, (vals, colsj, x)),
+        AppVersion("kernel", kernel, (vals, colsj, x),
+                   tpu_model_s=by / TPU_V5E.hbm_bw * 4),  # gather-bound
+    ], flops=fl, bytes_moved=by)
+
+
+def _gemm_app(name: str, dtype, M=512, K=512, N=512) -> ProxyApp:
+    a = jnp.asarray(_rng(6).random((M, K)), dtype)
+    b = jnp.asarray(_rng(7).random((K, N)), dtype)
+
+    def autovec(a, b):
+        return a @ b
+
+    def scalar(a, b):
+        def body(i, acc):
+            return acc.at[i].set(a[i] @ b)
+
+        return jax.lax.fori_loop(0, M, body, jnp.zeros((M, N), dtype))
+
+    def kernel(a, b):
+        from repro.kernels.gemm import ops as go
+        return go.gemm(a, b, block_multiplier=2, bk=256)
+
+    fl = 2.0 * M * K * N
+    by = (M * K + K * N + M * N) * jnp.dtype(dtype).itemsize
+    peak = TPU_V5E.peak_flops_bf16 / (2 if dtype == jnp.float32 else 1)
+    return ProxyApp(name, [
+        AppVersion("scalar", scalar, (a, b)),
+        AppVersion("autovec", autovec, (a, b)),
+        AppVersion("kernel", kernel, (a, b), tpu_model_s=fl / peak),
+    ], flops=fl, bytes_moved=by)
+
+
+def build_sgemm() -> ProxyApp:
+    return _gemm_app("sgemm", jnp.float32)
+
+
+def build_dgemm() -> ProxyApp:
+    # TPU has no f64 MXU: DGEMM maps to f32 (hardware-adaptation note);
+    # the host-measured columns use f64 to mirror the paper exactly.
+    return _gemm_app("dgemm", jnp.float64 if jax.config.read(
+        "jax_enable_x64") else jnp.float32)
+
+
+def _conv_net(name: str, specs, H=32, W=32, Cin=16) -> ProxyApp:
+    x = jnp.asarray(_rng(8).random((1, H, W, Cin)), jnp.float32)
+    ws = []
+    cin = Cin
+    for (k, cout) in specs:
+        ws.append(jnp.asarray(
+            _rng(9 + len(ws)).random((k, k, cin, cout)) * 0.1, jnp.float32))
+        cin = cout
+
+    def autovec(x, *ws):
+        for w in ws:
+            x = jax.lax.conv_general_dilated(
+                x, w, (1, 1), "SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = jnp.maximum(x, 0.1 * x)        # leaky relu
+        return x
+
+    def scalar(x, *ws):
+        # row-at-a-time im2col: the scalar-issue analogue
+        for w in ws:
+            k = w.shape[0]
+            pad = k // 2
+            xp = jnp.pad(x, ((0, 0), (pad, k - 1 - pad),
+                             (pad, k - 1 - pad), (0, 0)))
+            hh, ww_, ci, co = x.shape[1], x.shape[2], x.shape[3], w.shape[3]
+            wm = w.reshape(-1, co)
+
+            def body(i, acc):
+                rows = jax.lax.dynamic_slice_in_dim(xp, i, k, axis=1)
+                patches = jnp.stack(
+                    [jax.lax.dynamic_slice_in_dim(rows, dx, ww_, axis=2)
+                     for dx in range(k)], axis=3)   # (1,k,W,k,ci)
+                patch = patches.transpose(0, 2, 1, 3, 4).reshape(ww_, -1)
+                return acc.at[:, i].set((patch @ wm).reshape(1, ww_, co))
+
+            x = jax.lax.fori_loop(
+                0, hh, body, jnp.zeros((1, hh, ww_, co), jnp.float32))
+            x = jnp.maximum(x, 0.1 * x)
+        return x
+
+    def kernel(x, *ws):
+        from repro.kernels.conv2d import ops as co_ops
+        for w in ws:
+            x = co_ops.conv2d_same(x, w, block_h=8)
+            x = jnp.maximum(x, 0.1 * x)
+        return x
+
+    fl = 0.0
+    cin = Cin
+    for (k, cout) in specs:
+        fl += 2.0 * H * W * k * k * cin * cout
+        cin = cout
+    return ProxyApp(name, [
+        AppVersion("scalar", scalar, (x, *ws)),
+        AppVersion("autovec", autovec, (x, *ws)),
+        AppVersion("kernel", kernel, (x, *ws),
+                   tpu_model_s=fl / TPU_V5E.peak_flops_bf16),
+    ], flops=fl, bytes_moved=float(x.size * 4 * 2 * len(specs)))
+
+
+def build_alexnet() -> ProxyApp:
+    # AlexNet-ish middle stack (3x3 convs at CIFAR-scale for host timing)
+    return _conv_net("alexnet", [(3, 32), (3, 64), (3, 64)])
+
+
+def build_yolov3() -> ProxyApp:
+    # YOLOv3-ish residual cell: 1x1 reduce + 3x3 expand, twice
+    return _conv_net("yolov3", [(1, 8), (3, 32), (1, 16), (3, 32)])
+
+
+BUILDERS: Dict[str, Callable[[], ProxyApp]] = {
+    "stream": build_stream,
+    "spmv": build_spmv,
+    "sgemm": build_sgemm,
+    "dgemm": build_dgemm,
+    "alexnet": build_alexnet,
+    "yolov3": build_yolov3,
+}
+
+
+# ---------------------------------------------------------------------------
+# measurement
+# ---------------------------------------------------------------------------
+def _measure(fn, args, iters=3) -> float:
+    jfn = jax.jit(fn)
+    out = jfn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jfn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def evaluate_app(app: ProxyApp, measure: bool = True,
+                 skip_kernel_timing: bool = True) -> List[Dict]:
+    rows = []
+    base_ops = None
+    for v in app.versions:
+        compiled = jax.jit(v.fn).lower(*v.args).compile()
+        cost = compiled.cost_analysis() or {}
+        rep = hlo_lib.analyze_hlo(compiled.as_text())
+        total_ops = sum(rep.op_histogram.values())
+        if v.name == "scalar":
+            base_ops = max(total_ops, 1)
+        t = None
+        if measure and not (v.name == "kernel" and skip_kernel_timing):
+            t = _measure(v.fn, v.args)
+        rows.append({
+            "app": app.name, "version": v.name,
+            "host_seconds": t,
+            "tpu_model_seconds": v.tpu_model_s,
+            "flops_counter": cost.get("flops", -1.0),
+            "bytes_counter": cost.get("bytes accessed", -1.0),
+            "hlo_ops": total_ops,
+            "instruction_classes": hlo_lib.instruction_classes(
+                rep.op_histogram),
+            "op_reduction_vs_scalar": (base_ops / max(total_ops, 1)
+                                       if base_ops else None),
+            "useful_flops": app.flops,
+        })
+    return rows
+
+
+def run_all(measure: bool = True, apps: Optional[List[str]] = None
+            ) -> List[Dict]:
+    rows = []
+    for name, builder in BUILDERS.items():
+        if apps and name not in apps:
+            continue
+        rows.extend(evaluate_app(builder(), measure=measure))
+    return rows

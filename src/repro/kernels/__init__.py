@@ -1,0 +1,5 @@
+"""Pallas TPU kernels (validated on CPU in interpret mode).
+
+Each kernel package: kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd wrapper, auto-interpret off-TPU), ref.py (pure-jnp oracle).
+"""

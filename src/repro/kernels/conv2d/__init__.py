@@ -1,0 +1,2 @@
+from repro.kernels.conv2d.ops import conv2d_same  # noqa: F401
+from repro.kernels.conv2d import ref  # noqa: F401

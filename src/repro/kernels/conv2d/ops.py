@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.conv2d import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def conv2d_same(x, w, *, block_h=8, interpret=None):
+    return K.conv2d_same(x, w, block_h=block_h,
+                         interpret=interpret_default(interpret))

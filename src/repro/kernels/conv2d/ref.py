@@ -1,0 +1,10 @@
+"""Oracle conv2d (stride-1 SAME, NHWC)."""
+import jax
+import jax.numpy as jnp
+
+
+def conv2d_same(x, w):
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")).astype(x.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.flash_attention.ops import (  # noqa: F401
+    flash_attention,
+    flash_decode,
+)
+from repro.kernels.flash_attention import ref  # noqa: F401

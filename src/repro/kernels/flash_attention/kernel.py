@@ -1,0 +1,192 @@
+"""Fused flash attention (TPU Pallas): prefill/train forward + decode.
+
+Layout: (B*NH, S, H) with GQA expansion done in ops.py.  Grid is
+(batch*heads, q_blocks, kv_blocks) with the kv dim minor (sequential), so
+the online-softmax state (m, l, acc) lives in VMEM scratch across kv steps
+— the TPU-native counterpart of the jnp reference in
+repro.models.attention (HBM->VMEM blocking replaces the lax.scan carry).
+
+Causal handling is true block skipping (the "vsetvl" idiom): blocks above
+the diagonal are never visited by the compute body (pl.when), diagonal
+blocks apply the triangular mask, blocks below run unmasked — vs the
+paper's masked-predication idiom which computes the full rectangle.
+
+block_q/block_kv are multiplier-swept by core.autotune (LMUL analogue).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import LANE, cdiv
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal, softcap, scale, kv_steps, block_q, block_kv,
+                  skv_real):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # visit only blocks intersecting the causal band ("vsetvl" idiom)
+    visit = (j * block_kv <= (i + 1) * block_q - 1) if causal else True
+
+    @pl.when(visit)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)                   # (bq, H)
+        k = k_ref[0].astype(jnp.float32)                   # (bk, H)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale    # (bq, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        q_pos = i * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0)
+        kv_pos = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1)
+        mask = kv_pos < skv_real
+        if causal:
+            mask &= kv_pos <= q_pos
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, :1]                              # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)                     # (bq, 1)
+        p = jnp.exp(s - m_new)                             # (bq, bk)
+        l_new = l_ref[:, :1] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    j_last = jnp.minimum(kv_steps - 1,
+                         ((i + 1) * block_q - 1) // block_kv) if causal \
+        else kv_steps - 1
+
+    @pl.when(j == j_last)
+    def _store():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q, k, v, *, causal=True, softcap=0.0,
+                        block_q=512, block_kv=512, interpret=True):
+    """q: (BN, Sq, H); k/v: (BN, Skv, H) (GQA pre-expanded)."""
+    BN, Sq, H = q.shape
+    Skv = k.shape[1]
+    block_q = min(block_q, Sq)
+    block_kv = min(block_kv, Skv)
+    kv_steps = cdiv(Skv, block_kv)
+    grid = (BN, cdiv(Sq, block_q), kv_steps)
+    kern = functools.partial(
+        _flash_kernel, causal=causal, softcap=softcap, scale=H ** -0.5,
+        kv_steps=kv_steps, block_q=block_q, block_kv=block_kv, skv_real=Skv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, H), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_kv, H), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, H), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, H), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BN, Sq, H), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANE), jnp.float32),   # m
+            pltpu.VMEM((block_q, LANE), jnp.float32),   # l
+            pltpu.VMEM((block_q, H), jnp.float32),      # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# decode (one query token against a long cache) — sequential split-K with
+# VMEM-resident online-softmax state (flash-decoding on a sequential grid)
+# ---------------------------------------------------------------------------
+def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, kv_steps, block_kv, scale,
+                   softcap):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = valid_ref[0, 0]
+    visit = j * block_kv < valid
+
+    @pl.when(visit)
+    def _attend():
+        q = q_ref[0].astype(jnp.float32)                    # (1, H)
+        k = k_ref[0].astype(jnp.float32)                    # (bk, H)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale     # (1, bk)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        kv_pos = j * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        s = jnp.where(kv_pos < valid, s, NEG_INF)
+        m_prev = m_ref[:1, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l_ref[:1, :1] * corr + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == kv_steps - 1)
+    def _store():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[:1, :1], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, kv_valid, *, softcap=0.0, block_kv=1024,
+                 interpret=True):
+    """q: (BN, 1, H); k/v: (BN, S, H); kv_valid: (BN,) int32 valid lengths."""
+    BN, _, H = q.shape
+    S = k.shape[1]
+    block_kv = min(block_kv, S)
+    kv_steps = cdiv(S, block_kv)
+    kern = functools.partial(
+        _decode_kernel, kv_steps=kv_steps, block_kv=block_kv,
+        scale=H ** -0.5, softcap=softcap)
+    return pl.pallas_call(
+        kern,
+        grid=(BN, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
+            pl.BlockSpec((1, 1, H), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_kv, H), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, block_kv, H), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, H), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BN, 1, H), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, LANE), jnp.float32),
+            pltpu.VMEM((1, LANE), jnp.float32),
+            pltpu.VMEM((1, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_valid.reshape(BN, 1).astype(jnp.int32), q, k, v)

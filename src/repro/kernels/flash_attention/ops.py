@@ -1,0 +1,48 @@
+"""Jit'd wrappers: GQA expansion + layout + the fused kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.kernels.flash_attention import kernel as K
+
+
+def _expand(q, k, v):
+    """(B,S,N,H)-layout -> (B*NQ, S, H) with KV broadcast to query heads."""
+    B, Sq, NQ, H = q.shape
+    NKV = k.shape[2]
+    G = NQ // NKV
+    k = jnp.repeat(k, G, axis=2)
+    v = jnp.repeat(v, G, axis=2)
+    qT = q.transpose(0, 2, 1, 3).reshape(B * NQ, Sq, H)
+    kT = k.transpose(0, 2, 1, 3).reshape(B * NQ, -1, H)
+    vT = v.transpose(0, 2, 1, 3).reshape(B * NQ, -1, H)
+    return qT, kT, vT, (B, NQ, Sq, H)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "softcap", "block_q", "block_kv", "interpret"))
+def flash_attention(q, k, v, *, causal=True, softcap=0.0, block_q=512,
+                    block_kv=512, interpret=None):
+    """q: (B, Sq, NQ, H); k/v: (B, Skv, NKV, H) -> (B, Sq, NQ, H)."""
+    qT, kT, vT, (B, NQ, Sq, H) = _expand(q, k, v)
+    out = K.flash_attention_fwd(
+        qT, kT, vT, causal=causal, softcap=softcap, block_q=block_q,
+        block_kv=block_kv, interpret=interpret_default(interpret))
+    return out.reshape(B, NQ, Sq, H).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_kv",
+                                             "interpret"))
+def flash_decode(q, k, v, kv_valid, *, softcap=0.0, block_kv=1024,
+                 interpret=None):
+    """q: (B, 1, NQ, H); k/v cache: (B, S, NKV, H); kv_valid: (B,)."""
+    qT, kT, vT, (B, NQ, _, H) = _expand(q, k, v)
+    valid = jnp.repeat(kv_valid, NQ)
+    out = K.flash_decode(qT, kT, vT, valid, softcap=softcap,
+                         block_kv=block_kv,
+                         interpret=interpret_default(interpret))
+    return out.reshape(B, NQ, 1, H).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Oracle: naive full-softmax attention (fp32)."""
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, *, causal=True, softcap=0.0, kv_valid=None):
+    """q: (BN, Sq, H); k/v: (BN, Skv, H); kv_valid: (BN,) or None."""
+    BN, Sq, H = q.shape
+    Skv = k.shape[1]
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (H ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.ones((BN, Sq, Skv), bool)
+    if causal:
+        mask &= (jnp.arange(Skv)[None, None, :]
+                 <= jnp.arange(Sq)[None, :, None])
+    if kv_valid is not None:
+        mask &= jnp.arange(Skv)[None, None, :] < kv_valid[:, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

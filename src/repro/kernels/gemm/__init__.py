@@ -1,0 +1,2 @@
+from repro.kernels.gemm.ops import gemm  # noqa: F401
+from repro.kernels.gemm import ref  # noqa: F401

@@ -1,0 +1,59 @@
+"""Blocked GEMM with a sweepable block multiplier (paper Fig 7: LMUL).
+
+C[M,N] = A[M,K] @ B[K,N], fp32 accumulation in VMEM scratch.  Base MXU tile
+is 128x128; ``block_multiplier`` scales the M/N tile {1,2,4,8}x — the direct
+analogue of RVV LMUL: more work per grid step (deeper MXU pipelining, fewer
+grid iterations) vs a (multiplier^2)-scaled VMEM working set, whose overflow
+is the "register spill" that makes LMUL=8 lose (Fig 7's cliff).
+
+SGEMM -> bf16 inputs (MXU native); "DGEMM" -> f32 (TPU has no f64 MXU path;
+hardware-adaptation note in DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import MXU, cdiv, check_multiplier
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(a_ref[...], b_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def gemm(a, b, *, block_multiplier=1, bk: int = 512, out_dtype=None,
+         interpret=True):
+    check_multiplier(block_multiplier)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    out_dtype = out_dtype or a.dtype
+    bm = bn = MXU * block_multiplier
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    k_steps = cdiv(K, bk)
+    grid = (cdiv(M, bm), cdiv(N, bn), k_steps)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

@@ -1,0 +1,16 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.gemm import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("block_multiplier", "bk",
+                                             "out_dtype", "interpret"))
+def gemm(a, b, *, block_multiplier=1, bk=512, out_dtype=None, interpret=None):
+    return K.gemm(a, b, block_multiplier=block_multiplier, bk=bk,
+                  out_dtype=out_dtype,
+                  interpret=interpret_default(interpret))

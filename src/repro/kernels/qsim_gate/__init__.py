@@ -1,0 +1,2 @@
+from repro.kernels.qsim_gate.ops import apply_gate_planar  # noqa: F401
+from repro.kernels.qsim_gate import ref  # noqa: F401

@@ -1,0 +1,71 @@
+"""Fused single-qubit gate application over a state vector (paper C5, Qsim).
+
+The paper's Qsim lesson: the interleaved (re, im) complex layout defeats
+autovectorization; hand intrinsics with a VLEN-adaptive layout recover it.
+The TPU mapping (DESIGN.md §2): the state vector is stored PLANAR —
+re/im as separate (rows, 128) planes — so amplitude pairs land on full
+128-wide lanes; the interleaved layout would put the complex dim (size 2)
+on the lane axis, wasting 126/128 lanes.
+
+For a gate on qubit q (2^q = pair stride), view the planar state as
+(outer, 2, 2^q): amp0 = [:, 0, :], amp1 = [:, 1, :].  When 2^q >= LANE the
+pair dim maps onto tile rows and a single VMEM block covers both halves.
+Low qubits (2^q < LANE) instead use the in-block shuffle path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, cdiv
+
+
+def _gate_kernel(g_ref, re_ref, im_ref, ore_ref, oim_ref):
+    # blocks: (br, 2, bc) — dim 1 is the qubit pair axis
+    re0, re1 = re_ref[:, 0, :], re_ref[:, 1, :]
+    im0, im1 = im_ref[:, 0, :], im_ref[:, 1, :]
+    g = g_ref[...]                  # (2, 4): [[a_re, a_im, b_re, b_im],
+    a_re, a_im, b_re, b_im = g[0, 0], g[0, 1], g[0, 2], g[0, 3]
+    c_re, c_im, d_re, d_im = g[1, 0], g[1, 1], g[1, 2], g[1, 3]
+    # new0 = a*amp0 + b*amp1 ; new1 = c*amp0 + d*amp1  (complex)
+    ore_ref[:, 0, :] = a_re * re0 - a_im * im0 + b_re * re1 - b_im * im1
+    oim_ref[:, 0, :] = a_re * im0 + a_im * re0 + b_re * im1 + b_im * re1
+    ore_ref[:, 1, :] = c_re * re0 - c_im * im0 + d_re * re1 - d_im * im1
+    oim_ref[:, 1, :] = c_re * im0 + c_im * re0 + d_re * im1 + d_im * re1
+
+
+def apply_gate_planar(re, im, gate, qubit: int, *, block_cols=None,
+                      interpret=True):
+    """re/im: (2^n,) planar state planes; gate: (2,2) complex -> packed.
+
+    Returns (re', im').  Requires 2^qubit >= 1; the state is reshaped to
+    (outer, 2, 2^qubit) so amplitude pairs are [o, 0, :] / [o, 1, :].
+    """
+    n_amps = re.shape[0]
+    stride = 1 << qubit
+    outer = n_amps // (2 * stride)
+    re3 = re.reshape(outer, 2, stride)
+    im3 = im.reshape(outer, 2, stride)
+    bc = min(block_cols or max(stride, 1), stride)
+    br = 1
+    gp = jnp.stack([
+        jnp.array([gate[0, 0].real, gate[0, 0].imag,
+                   gate[0, 1].real, gate[0, 1].imag], jnp.float32),
+        jnp.array([gate[1, 0].real, gate[1, 0].imag,
+                   gate[1, 1].real, gate[1, 1].imag], jnp.float32),
+    ])
+    grid = (outer, cdiv(stride, bc))
+    spec = pl.BlockSpec((br, 2, bc), lambda i, j: (i, 0, j))
+    out_re, out_im = pl.pallas_call(
+        _gate_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((2, 4), lambda i, j: (0, 0)), spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(re3.shape, re.dtype),
+                   jax.ShapeDtypeStruct(im3.shape, im.dtype)],
+        interpret=interpret,
+    )(gp, re3, im3)
+    return out_re.reshape(n_amps), out_im.reshape(n_amps)

@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.qsim_gate import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("qubit", "interpret"))
+def apply_gate_planar(re, im, gate, qubit, *, interpret=None):
+    return K.apply_gate_planar(re, im, gate, qubit,
+                               interpret=interpret_default(interpret))

@@ -1,0 +1,13 @@
+"""Oracle: complex single-qubit gate application."""
+import jax.numpy as jnp
+
+
+def apply_gate_complex(state, gate, qubit: int):
+    """state: (2^n,) complex64; gate: (2,2) complex."""
+    n = state.shape[0]
+    stride = 1 << qubit
+    s = state.reshape(n // (2 * stride), 2, stride)
+    a0, a1 = s[:, 0, :], s[:, 1, :]
+    new0 = gate[0, 0] * a0 + gate[0, 1] * a1
+    new1 = gate[1, 0] * a0 + gate[1, 1] * a1
+    return jnp.stack([new0, new1], axis=1).reshape(n)

@@ -1,0 +1,2 @@
+from repro.kernels.spmv.ops import spmv_ell  # noqa: F401
+from repro.kernels.spmv import ref  # noqa: F401

@@ -1,0 +1,17 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.spmv import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("idiom", "block_multiplier",
+                                             "interpret"))
+def spmv_ell(vals, cols, x, *, idiom="take", block_multiplier=1,
+             interpret=None):
+    return K.spmv_ell(vals, cols, x, idiom=idiom,
+                      block_multiplier=block_multiplier,
+                      interpret=interpret_default(interpret))

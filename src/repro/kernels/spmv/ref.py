@@ -1,0 +1,16 @@
+"""Oracle ELL SpMV + format helpers."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def spmv_ell(vals, cols, x):
+    return jnp.sum(vals * x[cols], axis=-1, keepdims=True)
+
+
+def random_ell(key_seed: int, rows: int, cols: int, nnz_per_row: int,
+               dtype=np.float32):
+    """Deterministic random ELL matrix (numpy; test/bench helper)."""
+    rng = np.random.default_rng(key_seed)
+    vals = rng.standard_normal((rows, nnz_per_row)).astype(dtype)
+    idx = rng.integers(0, cols, size=(rows, nnz_per_row)).astype(np.int32)
+    return vals, idx

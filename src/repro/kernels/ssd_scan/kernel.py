@@ -1,0 +1,95 @@
+"""Chunked SSD (Mamba-2 state-space duality) scan — the SSM hot spot.
+
+One (batch*head) stream per grid row; the chunk axis is the sequential
+minor grid dim, so the inter-chunk recurrent state h (P x N) lives in VMEM
+scratch across chunk steps — HBM sees each token exactly once (the whole
+point of SSD's matmul-rich chunking on TPU: intra-chunk work runs on the
+MXU at (L x L)(L x P) granularity, the O(S) recurrence collapses to one
+VMEM-resident rank-P*N state update per chunk).
+
+Inputs per (b*h): x (S, P), dt (S, 1), B/C (S, N) [broadcast over heads in
+ops.py], A scalar per head.  Matches repro.models.mamba2._ssd_chunked.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.common import cdiv
+
+
+def _ssd_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, o_ref, h_ref, *,
+                chunk):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (L, P)
+    dt = dt_ref[0].astype(jnp.float32)      # (L, 1)
+    Bm = b_ref[0].astype(jnp.float32)       # (L, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (L, N)
+    A = a_ref[0, 0]                         # scalar (negative)
+    D = d_ref[0, 0]
+
+    dA = dt * A                             # (L, 1) log-decay steps
+    cum = jnp.cumsum(dA, axis=0)            # (L, 1)
+
+    # intra-chunk: y_l = sum_{m<=l} exp(cum_l - cum_m) (C_l.B_m) dt_m x_m
+    S_lm = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)  # (L, L)
+    seg = cum - cum.T                       # (L, L) cum_l - cum_m
+    L = x.shape[0]
+    causal = (jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+              >= jax.lax.broadcasted_iota(jnp.int32, (L, L), 1))
+    W = jnp.where(causal, S_lm * jnp.exp(seg), 0.0)
+    xdt = x * dt                            # (L, P)
+    y = jax.lax.dot_general(W, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_l += exp(cum_l) C_l . h_prev
+    h_prev = h_ref[...]                     # (N, P)
+    y += jnp.exp(cum) * jax.lax.dot_general(
+        Cm, h_prev, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    # state update: h = exp(cum_L) h_prev + sum_m exp(cum_L - cum_m) dt_m B_m x_m
+    total = cum[-1:, :]                     # (1, 1)
+    decay_end = jnp.exp(total - cum)        # (L, 1)
+    h_new = jnp.exp(total[0, 0]) * h_prev + jax.lax.dot_general(
+        Bm * (decay_end * dt), x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (N, P)
+    h_ref[...] = h_new
+
+    o_ref[0] = (y + D * x).astype(o_ref.dtype)
+
+
+def ssd_scan(x, dt, B, C, A, D, *, chunk=128, interpret=True):
+    """x: (BH, S, P); dt: (BH, S, 1); B/C: (BH, S, N); A/D: (BH,).
+    Returns y: (BH, S, P)."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    grid = (BH, S // chunk)
+    return pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, c: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, P), x.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, B, C, A.reshape(BH, 1), D.reshape(BH, 1))

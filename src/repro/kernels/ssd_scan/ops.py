@@ -1,0 +1,14 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.ssd_scan import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, B, C, A, D, *, chunk=128, interpret=None):
+    return K.ssd_scan(x, dt, B, C, A, D, chunk=chunk,
+                      interpret=interpret_default(interpret))

@@ -1,0 +1,26 @@
+"""Oracle: naive sequential SSD recurrence (token by token)."""
+import jax
+import jax.numpy as jnp
+
+
+def ssd_naive(x, dt, B, C, A, D):
+    """x: (BH,S,P); dt: (BH,S,1); B/C: (BH,S,N); A/D: (BH,).  fp32."""
+    BH, S, P = x.shape
+    N = B.shape[-1]
+
+    def per_stream(x_s, dt_s, B_s, C_s, A_s, D_s):
+        def step(h, inp):
+            xt, dtt, Bt, Ct = inp
+            decay = jnp.exp(dtt[0] * A_s)
+            h = decay * h + dtt[0] * jnp.outer(Bt, xt)      # (N, P)
+            y = Ct @ h + D_s * xt
+            return h, y
+
+        h0 = jnp.zeros((N, P), jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (x_s, dt_s, B_s, C_s))
+        return ys
+
+    return jax.vmap(per_stream)(
+        x.astype(jnp.float32), dt.astype(jnp.float32),
+        B.astype(jnp.float32), C.astype(jnp.float32),
+        A.astype(jnp.float32), D.astype(jnp.float32)).astype(x.dtype)

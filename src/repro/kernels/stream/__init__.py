@@ -1,0 +1,2 @@
+from repro.kernels.stream.ops import stream  # noqa: F401
+from repro.kernels.stream import ref  # noqa: F401

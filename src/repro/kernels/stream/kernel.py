@@ -1,0 +1,71 @@
+"""STREAM kernels (copy / scale / add / triad) — the unit-stride memory
+microbenchmark (paper C1, Fig 4 memory rows; Stream proxy app).
+
+Arrays are viewed as (rows, 128) with row-blocked tiles of
+(SUBLANE * block_multiplier) rows — the LMUL sweep axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, SUBLANE, cdiv, check_multiplier
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def _scale_kernel(alpha_ref, x_ref, o_ref):
+    o_ref[...] = alpha_ref[0] * x_ref[...]
+
+
+def _add_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def _triad_kernel(alpha_ref, x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + alpha_ref[0] * y_ref[...]
+
+
+def _call(kernel, arrays, alpha, block_multiplier, interpret):
+    check_multiplier(block_multiplier)
+    x = arrays[0]
+    rows, lane = x.shape
+    br = SUBLANE * block_multiplier
+    grid = (cdiv(rows, br),)
+    spec = pl.BlockSpec((br, lane), lambda i: (i, 0))
+    in_specs = []
+    args = []
+    if alpha is not None:
+        in_specs.append(pl.BlockSpec((1,), lambda i: (0,)))
+        args.append(jnp.full((1,), alpha, x.dtype))
+    in_specs.extend([spec] * len(arrays))
+    args.extend(arrays)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def stream_copy(x, *, block_multiplier=1, interpret=True):
+    return _call(_copy_kernel, [x], None, block_multiplier, interpret)
+
+
+def stream_scale(x, alpha, *, block_multiplier=1, interpret=True):
+    return _call(_scale_kernel, [x], alpha, block_multiplier, interpret)
+
+
+def stream_add(x, y, *, block_multiplier=1, interpret=True):
+    return _call(_add_kernel, [x, y], None, block_multiplier, interpret)
+
+
+def stream_triad(x, y, alpha, *, block_multiplier=1, interpret=True):
+    return _call(_triad_kernel, [x, y], alpha, block_multiplier, interpret)

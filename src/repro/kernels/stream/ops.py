@@ -1,0 +1,30 @@
+"""Jit'd wrappers for the STREAM kernels (auto interpret off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.stream import kernel as K
+
+KINDS = ("copy", "scale", "add", "triad")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kind", "block_multiplier", "interpret"))
+def stream(kind, x, y=None, alpha=2.0, *, block_multiplier=1, interpret=None):
+    interpret = interpret_default(interpret)
+    if kind == "copy":
+        return K.stream_copy(x, block_multiplier=block_multiplier,
+                             interpret=interpret)
+    if kind == "scale":
+        return K.stream_scale(x, alpha, block_multiplier=block_multiplier,
+                              interpret=interpret)
+    if kind == "add":
+        return K.stream_add(x, y, block_multiplier=block_multiplier,
+                            interpret=interpret)
+    if kind == "triad":
+        return K.stream_triad(x, y, alpha, block_multiplier=block_multiplier,
+                              interpret=interpret)
+    raise ValueError(kind)

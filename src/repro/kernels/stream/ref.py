@@ -1,0 +1,18 @@
+"""Pure-jnp oracles for the STREAM kernels."""
+import jax.numpy as jnp
+
+
+def stream_copy(x):
+    return x + 0  # force a copy
+
+
+def stream_scale(x, alpha):
+    return jnp.asarray(alpha, x.dtype) * x
+
+
+def stream_add(x, y):
+    return x + y
+
+
+def stream_triad(x, y, alpha):
+    return x + jnp.asarray(alpha, x.dtype) * y

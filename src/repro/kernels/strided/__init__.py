@@ -1,0 +1,2 @@
+from repro.kernels.strided.ops import strided_gather  # noqa: F401
+from repro.kernels.strided import ref  # noqa: F401

@@ -1,0 +1,63 @@
+"""Strided-access kernels — paper Fig 2 (vlse vs masked-vle vs scalar).
+
+Task: gather every ``stride``-th row of a (rows, 128) array.
+
+Three idioms, mapping the paper's RVV instruction choices to TPU tiling:
+  * ``strided_rowwise``  (vlse analogue): one strided row per grid step —
+    the BlockSpec index map jumps ``i * stride`` rows; each DMA moves a
+    single (1, 128) sliver, defeating wide transfers.
+  * ``overfetch_select`` (masked-vle analogue): fetch the full contiguous
+    span covering ``br`` output rows (br*stride input rows) and select the
+    strided rows in-register (wide DMAs, ``stride``x over-fetch).
+  * the scalar baseline lives in core.veceval (fori_loop), matching the
+    paper's scalar-load reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, SUBLANE, cdiv, check_multiplier
+
+
+def _row_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def strided_rowwise(x, stride: int, *, interpret=True):
+    """out[i] = x[i*stride]; one row per grid step (vlse idiom)."""
+    rows, lane = x.shape
+    out_rows = cdiv(rows, stride)
+    return pl.pallas_call(
+        _row_kernel,
+        grid=(out_rows,),
+        in_specs=[pl.BlockSpec((1, lane), lambda i: (i * stride, 0))],
+        out_specs=pl.BlockSpec((1, lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, lane), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def _select_kernel(stride: int, x_ref, o_ref):
+    # x_ref: (br*stride, lane) contiguous span; select rows 0, s, 2s, ...
+    br = o_ref.shape[0]
+    x = x_ref[...]
+    o_ref[...] = x.reshape(br, stride, x.shape[-1])[:, 0, :]
+
+
+def overfetch_select(x, stride: int, *, block_multiplier=1, interpret=True):
+    """Contiguous fetch + in-register select (masked-vle idiom)."""
+    check_multiplier(block_multiplier)
+    rows, lane = x.shape
+    out_rows = rows // stride
+    br = SUBLANE * block_multiplier
+    import functools
+    return pl.pallas_call(
+        functools.partial(_select_kernel, stride),
+        grid=(cdiv(out_rows, br),),
+        in_specs=[pl.BlockSpec((br * stride, lane), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((out_rows, lane), x.dtype),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,22 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.strided import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "idiom",
+                                             "block_multiplier", "interpret"))
+def strided_gather(x, stride, idiom="overfetch_select", *,
+                   block_multiplier=1, interpret=None):
+    interpret = interpret_default(interpret)
+    if idiom == "strided_rowwise":
+        return K.strided_rowwise(x, stride, interpret=interpret)
+    if idiom == "overfetch_select":
+        return K.overfetch_select(x, stride,
+                                  block_multiplier=block_multiplier,
+                                  interpret=interpret)
+    raise ValueError(idiom)

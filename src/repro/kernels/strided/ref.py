@@ -1,0 +1,7 @@
+"""Oracle: strided row gather."""
+from repro.kernels.common import cdiv
+
+
+def strided_gather(x, stride: int, out_rows=None):
+    n = out_rows if out_rows is not None else cdiv(x.shape[0], stride)
+    return x[: n * stride : stride]

@@ -1,0 +1,2 @@
+from repro.kernels.tailmask.ops import tail_compute  # noqa: F401
+from repro.kernels.tailmask import ref  # noqa: F401

@@ -1,0 +1,90 @@
+"""Tail-element handling — paper Fig 3 (vsetvl vs masked predication).
+
+Task: y = silu(x) * 2 over N elements where N is NOT a tile multiple.
+
+Two idioms:
+  * ``exact_tail`` (vsetvl analogue): full tiles run unmasked; the ragged
+    remainder runs as a second, exactly-sized kernel launch — no wasted
+    lanes, small launch overhead.
+  * ``masked_full`` (predication analogue): N padded up to a tile multiple;
+    every tile computes full-width then masks — uniform control, pays
+    (padN - N) wasted work plus the per-element mask select.
+
+The Fig-3 benchmark sweeps the active fraction and reports the modeled
+throughput gap (the paper measures a constant ~35% predication penalty on
+the X60; the TPU analogue is the masked tail's wasted-lane fraction plus
+the select cost).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.common import LANE, SUBLANE, cdiv
+
+
+def _compute(x):
+    return jax.nn.silu(x) * 2.0
+
+
+def _plain_kernel(x_ref, o_ref):
+    o_ref[...] = _compute(x_ref[...])
+
+
+def _masked_kernel(n_valid_ref, x_ref, o_ref):
+    i = pl.program_id(0)
+    rows, lane = o_ref.shape
+    base = i * rows * lane
+    flat_idx = (base
+                + jax.lax.broadcasted_iota(jnp.int32, (rows, lane), 0) * lane
+                + jax.lax.broadcasted_iota(jnp.int32, (rows, lane), 1))
+    mask = flat_idx < n_valid_ref[0]
+    o_ref[...] = jnp.where(mask, _compute(x_ref[...]), 0.0)
+
+
+def exact_tail(x, *, block_rows=SUBLANE, interpret=True):
+    """x: (rows, LANE) with a possibly ragged final row count."""
+    rows, lane = x.shape
+    full = (rows // block_rows) * block_rows
+
+    parts = []
+    if full:
+        parts.append(pl.pallas_call(
+            _plain_kernel,
+            grid=(full // block_rows,),
+            in_specs=[pl.BlockSpec((block_rows, lane), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((block_rows, lane), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((full, lane), x.dtype),
+            interpret=interpret,
+        )(x[:full]))
+    rem = rows - full
+    if rem:
+        parts.append(pl.pallas_call(
+            _plain_kernel,
+            grid=(1,),
+            in_specs=[pl.BlockSpec((rem, lane), lambda i: (0, 0))],
+            out_specs=pl.BlockSpec((rem, lane), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((rem, lane), x.dtype),
+            interpret=interpret,
+        )(x[full:]))
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+
+def masked_full(x, n_valid: int, *, block_rows=SUBLANE, interpret=True):
+    """x pre-padded to a block multiple; masks every tile to n_valid."""
+    rows, lane = x.shape
+    assert rows % block_rows == 0
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((block_rows, lane), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lane), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lane), x.dtype),
+        interpret=interpret,
+    )(jnp.full((1,), n_valid, jnp.int32), x)

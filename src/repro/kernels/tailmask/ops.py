@@ -1,0 +1,21 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.tailmask import kernel as K
+
+
+@functools.partial(jax.jit, static_argnames=("idiom", "block_rows",
+                                             "n_valid", "interpret"))
+def tail_compute(x, idiom="exact_tail", n_valid=None, *, block_rows=8,
+                 interpret=None):
+    interpret = interpret_default(interpret)
+    if idiom == "exact_tail":
+        return K.exact_tail(x, block_rows=block_rows, interpret=interpret)
+    if idiom == "masked_full":
+        return K.masked_full(x, n_valid, block_rows=block_rows,
+                             interpret=interpret)
+    raise ValueError(idiom)

@@ -1,0 +1,13 @@
+"""Oracle for the tail-handling kernels."""
+import jax
+import jax.numpy as jnp
+
+
+def compute(x):
+    return jax.nn.silu(x) * 2.0
+
+
+def compute_masked(x_padded, n_valid: int):
+    rows, lane = x_padded.shape
+    idx = jnp.arange(rows * lane).reshape(rows, lane)
+    return jnp.where(idx < n_valid, compute(x_padded), 0.0)

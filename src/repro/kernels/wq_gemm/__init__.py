@@ -1,0 +1,2 @@
+from repro.kernels.wq_gemm.ops import quantize, wq_gemm  # noqa: F401
+from repro.kernels.wq_gemm import ref  # noqa: F401

@@ -1,0 +1,18 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.common import interpret_default
+from repro.kernels.wq_gemm import kernel as K
+from repro.kernels.wq_gemm.ref import quantize  # noqa: F401 (public API)
+
+
+@functools.partial(jax.jit, static_argnames=("block_multiplier", "bk",
+                                             "out_dtype", "interpret"))
+def wq_gemm(x, q, scale, *, block_multiplier=1, bk=512, out_dtype=None,
+            interpret=None):
+    return K.wq_gemm(x, q, scale, block_multiplier=block_multiplier, bk=bk,
+                     out_dtype=out_dtype,
+                     interpret=interpret_default(interpret))

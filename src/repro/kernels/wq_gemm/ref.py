@@ -1,0 +1,18 @@
+"""Oracle: dequantize-then-matmul, plus the quantizer."""
+import jax.numpy as jnp
+
+
+def quantize(w, axis=0):
+    """Per-output-channel symmetric int8 over the contraction axis.
+    w: (K, N) -> q (K, N) int8, scale (N,) f32."""
+    amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127,
+                 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def wq_gemm(x, q, scale, out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    w = q.astype(jnp.float32) * scale[None, :]
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)

@@ -1,0 +1,349 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on
+512 placeholder host devices; record memory/cost analysis, parsed
+collective traffic, the HLO op histogram, and the analytic roofline inputs.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--force]
+  ... --variant sp_kv|no_block_causal|fused_xent|remat_dots (hillclimb variants)
+
+Results land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>__<variant>.json
+(the roofline table and EXPERIMENTS.md read these).
+"""
+import argparse   # noqa: E402
+import dataclasses  # noqa: E402
+import json       # noqa: E402
+import pathlib    # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import (  # noqa: E402
+    ARCH_IDS, SHAPES, SHAPES_BY_NAME, get_config, shape_applicable)
+from repro.core import costmodel, hlo as hlo_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+from repro.parallel import rules_for, sharding_ctx, tree_shardings  # noqa: E402
+from repro.parallel.axes import decisions as sharding_decisions  # noqa: E402
+from repro.serve import make_prefill_step, make_serve_step  # noqa: E402
+from repro.train import (  # noqa: E402
+    batch_specs, init_train_state, make_train_step, train_state_specs)
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / (
+    "benchmarks/results/dryrun")
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass
+class Variant:
+    name: str = "baseline"
+    sp_kv: bool = False
+    block_causal: bool = True
+    fused_xent: bool = False
+    remat: str = "full"
+    microbatches: int = 1
+    grad_compression: str | None = None
+    weight_quant: str | None = None      # int8 weight-only (serving)
+    zero1: bool = False                  # shard fp32 moments over "data"
+
+
+VARIANTS = {
+    "baseline": Variant(),
+    "sp_kv": Variant(name="sp_kv", sp_kv=True),
+    "no_block_causal": Variant(name="no_block_causal", block_causal=False),
+    "fused_xent": Variant(name="fused_xent", fused_xent=True),
+    "remat_dots": Variant(name="remat_dots", remat="dots"),
+    "remat_none": Variant(name="remat_none", remat="none"),
+    "save_blocks": Variant(name="save_blocks", remat="save_blocks"),
+    "mb4": Variant(name="mb4", microbatches=4),
+    "int8_ef": Variant(name="int8_ef", grad_compression="int8_ef"),
+    "wq_int8": Variant(name="wq_int8", weight_quant="int8"),
+    "wq_int8_spkv": Variant(name="wq_int8_spkv", weight_quant="int8",
+                            sp_kv=True),
+    "zero1": Variant(name="zero1", zero1=True),
+}
+
+
+def _batch_sds(cfg, shape, kind: str):
+    GB = shape.global_batch
+    S = shape.seq_len if kind != "decode" else 1
+    b = {
+        "tokens": SDS((GB, S), jnp.int32),
+        "positions": SDS((GB, S), jnp.int32),
+    }
+    if kind == "train":
+        b["labels"] = SDS((GB, S), jnp.int32)
+        b["loss_mask"] = SDS((GB, S), jnp.float32)
+    if cfg.family == "vlm" and kind != "decode":
+        b["image_embeds"] = SDS((GB, cfg.num_image_tokens, cfg.d_model),
+                                jnp.bfloat16)
+    if cfg.family == "audio" and kind != "decode":
+        b["audio_frames"] = SDS((GB, cfg.n_audio_ctx, cfg.d_model),
+                                jnp.bfloat16)
+    return b
+
+
+def _sharded_bytes(sds_tree, sharding_tree) -> int:
+    """Exact per-device bytes of a (ShapeDtypeStruct, NamedSharding) tree."""
+    import numpy as np
+
+    total = 0
+    for sds, sh in zip(jax.tree.leaves(sds_tree),
+                       jax.tree.leaves(sharding_tree,
+                                       is_leaf=lambda x: hasattr(
+                                           x, "shard_shape"))):
+        shard = sh.shard_shape(sds.shape)
+        total += int(np.prod(shard)) * sds.dtype.itemsize
+    return total
+
+
+def _maybe_quantized_params(model, variant: Variant):
+    """ShapeDtypeStructs + logical specs for the (optionally int8) params."""
+    params_sds = jax.eval_shape(model.init_params, jax.random.key(0))
+    if variant.weight_quant == "int8":
+        from repro.models.quant import quantize_params, quantize_specs
+        specs = quantize_specs(model.param_specs(), params_sds)
+        params_sds = jax.eval_shape(quantize_params, params_sds)
+        return params_sds, specs
+    return params_sds, model.param_specs()
+
+
+def lower_cell(cfg, shape, mesh, variant: Variant):
+    """Build + lower + compile one cell; return the lowered/compiled pair."""
+    cfg = dataclasses.replace(cfg, remat=variant.remat)
+    model = build_model(cfg)
+    rules = rules_for(cfg, mesh, sp_kv=variant.sp_kv)
+    state_bytes = 0
+
+    with sharding_ctx(mesh, rules) as ctx:
+        if shape.kind == "train":
+            opt = AdamWConfig(lr=3e-4)
+            step = make_train_step(
+                model, opt, microbatches=variant.microbatches,
+                fused_xent=variant.fused_xent,
+                grad_compression=variant.grad_compression)
+            state_sds = jax.eval_shape(
+                lambda k: init_train_state(
+                    model, k, opt,
+                    grad_compression=variant.grad_compression),
+                jax.random.key(0))
+            batch = _batch_sds(cfg, shape, "train")
+            state_specs = train_state_specs(model, variant.grad_compression)
+            state_sh = tree_shardings(state_specs, state_sds, mesh, rules)
+            if variant.zero1:
+                # ZeRO-1: fp32 moments additionally shard their "embed"
+                # (typically the unsharded big dim of every weight) over
+                # the data axis — optimizer state /16 per device; XLA turns
+                # the grad all-reduce into reduce-scatter + all-gather.
+                zrules = dict(rules)
+                zrules["embed"] = "data"
+                for key in ("m", "v"):
+                    state_sh["opt"][key] = tree_shardings(
+                        state_specs["opt"][key], state_sds["opt"][key],
+                        mesh, zrules)
+            bspec = batch_specs(cfg, "train")
+            batch_sh = tree_shardings(bspec, batch, mesh, rules)
+            state_bytes = _sharded_bytes(state_sds, state_sh)
+            fn = jax.jit(step, in_shardings=(state_sh, batch_sh))
+            lowered = fn.lower(state_sds, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(model)
+            params_sds, params_specs = _maybe_quantized_params(model, variant)
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            batch = _batch_sds(cfg, shape, "prefill")
+            params_sh = tree_shardings(params_specs, params_sds,
+                                       mesh, rules)
+            cache_sh = tree_shardings(model.cache_specs(), cache_sds,
+                                      mesh, rules)
+            tok_sh = tree_shardings(
+                {"tokens": ("batch", None), "positions": ("batch", None)},
+                {"tokens": batch["tokens"], "positions": batch["positions"]},
+                mesh, rules)
+            extra = {k: v for k, v in batch.items()
+                     if k in ("image_embeds", "audio_frames")}
+            extra_spec = {k: ("batch", None, None) for k in extra}
+            extra_sh = tree_shardings(extra_spec, extra, mesh, rules)
+            state_bytes = (_sharded_bytes(params_sds, params_sh)
+                           + _sharded_bytes(cache_sds, cache_sh))
+            fn = jax.jit(step, in_shardings=(
+                params_sh, cache_sh, tok_sh["tokens"], tok_sh["positions"],
+                extra_sh))
+            lowered = fn.lower(params_sds, cache_sds, batch["tokens"],
+                               batch["positions"], extra)
+        else:  # decode
+            step = make_serve_step(model)
+            params_sds, params_specs = _maybe_quantized_params(model, variant)
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            batch = _batch_sds(cfg, shape, "decode")
+            params_sh = tree_shardings(params_specs, params_sds,
+                                       mesh, rules)
+            cache_sh = tree_shardings(model.cache_specs(), cache_sds,
+                                      mesh, rules)
+            tok_sh = tree_shardings(
+                {"tokens": ("batch", None), "positions": ("batch", None)},
+                {"tokens": batch["tokens"], "positions": batch["positions"]},
+                mesh, rules)
+            state_bytes = (_sharded_bytes(params_sds, params_sh)
+                           + _sharded_bytes(cache_sds, cache_sh))
+            fn = jax.jit(step, in_shardings=(
+                params_sh, cache_sh, tok_sh["tokens"], tok_sh["positions"]))
+            lowered = fn.lower(params_sds, cache_sds, batch["tokens"],
+                               batch["positions"])
+        t0 = time.time()
+        compiled = lowered.compile()
+        compile_s = time.time() - t0
+        return lowered, compiled, compile_s, sharding_decisions(), state_bytes
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: Variant, out_dir: pathlib.Path, force: bool = False):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out = out_dir / f"{arch}__{shape_name}__{mesh_name}__{variant.name}.json"
+    if out.exists() and not force:
+        print(f"[skip existing] {out.name}")
+        return json.loads(out.read_text())
+
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    runnable, why = shape_applicable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "variant": variant.name, "runnable": runnable,
+    }
+    if not runnable:
+        rec["skip_reason"] = why
+        out.write_text(json.dumps(rec, indent=2))
+        print(f"[skipped cell] {out.name}: {why}")
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    t_start = time.time()
+    try:
+        lowered, compiled, compile_s, decisions, state_bytes = lower_cell(
+            cfg, shape, mesh, variant)
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        out.write_text(json.dumps(rec, indent=2))
+        print(f"[FAILED] {out.name}: {rec['error']}")
+        return rec
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    report = hlo_lib.analyze_hlo(compiled.as_text(), total_devices=n_chips)
+
+    opts = costmodel.ImplOpts(
+        block_causal=variant.block_causal, remat=variant.remat,
+        fused_xent=variant.fused_xent, microbatches=variant.microbatches)
+    fl = costmodel.step_flops(cfg, shape, opts)
+    hbm = costmodel.step_hbm_bytes(cfg, shape, opts)
+    mfl = costmodel.model_flops(cfg, shape)
+    terms = costmodel.roofline_terms(
+        fl["total"], hbm["total"], report.collective_bytes, n_chips)
+
+    rec.update({
+        "compile_seconds": compile_s,
+        "wall_seconds": time.time() - t_start,
+        "n_chips": n_chips,
+        "memory": {
+            "argument_bytes_per_device": mem.argument_size_in_bytes,
+            "output_bytes_per_device": mem.output_size_in_bytes,
+            "temp_bytes_per_device": mem.temp_size_in_bytes,
+            "alias_bytes_per_device": mem.alias_size_in_bytes,
+            "peak_estimate_per_device": (
+                mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+            # exact sharded persistent state (params/opt/cache) — the
+            # reliable channel; temp_bytes over-reports on CPU (bf16
+            # fusions emulated in f32), see EXPERIMENTS.md §Dry-run
+            "state_bytes_per_device": state_bytes,
+        },
+        "cost_analysis": {
+            "flops_per_device": cost.get("flops", -1.0),
+            "bytes_accessed_per_device": cost.get("bytes accessed", -1.0),
+        },
+        "collectives": {
+            "count": len(report.collectives),
+            "link_bytes_per_device": report.collective_bytes,
+            "breakdown": report.collective_breakdown(),
+        },
+        "op_histogram": report.op_histogram,
+        "instruction_classes": hlo_lib.instruction_classes(
+            report.op_histogram),
+        "while_bodies": report.while_bodies,
+        "analytic": {
+            "step_flops_global": fl["total"],
+            "flops_components": {k: v for k, v in fl.items()
+                                 if k not in ("total",)},
+            "hbm_bytes_global": hbm["total"],
+            "hbm_components": {k: v for k, v in hbm.items()
+                               if k not in ("total",)},
+            "model_flops_6nd": mfl,
+            "useful_flops_ratio": mfl / max(fl["total"], 1.0),
+        },
+        "roofline": terms,
+        "sharding_decisions": decisions,
+    })
+    out.write_text(json.dumps(rec, indent=2))
+    bound = terms["bound"]
+    print(f"[ok] {out.name}: compile={compile_s:.1f}s bound={bound} "
+          f"t=({terms['t_compute_s']:.4f}/{terms['t_memory_s']:.4f}/"
+          f"{terms['t_collective_s']:.4f})s "
+          f"mem/dev={rec['memory']['peak_estimate_per_device']/2**30:.2f}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=list(VARIANTS))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out-dir", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    variant = VARIANTS[args.variant]
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((arch, s.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    failures = 0
+    for arch, shape_name in cells:
+        for mp in meshes:
+            rec = run_cell(arch, shape_name, mp, variant, out_dir,
+                           force=args.force)
+            if "error" in rec:
+                failures += 1
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

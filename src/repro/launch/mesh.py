@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.  The single-pod mesh is
+16x16 = 256 chips (one TPU v5e pod); multi-pod adds a leading "pod" axis
+(2 pods = 512 chips).  Data parallelism maps to ("pod", "data"), tensor/
+expert parallelism to "model" (see repro.parallel).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)} — "
+            "launch via repro.launch.dryrun (it sets "
+            "--xla_force_host_platform_device_count before importing jax)")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes),
+                         devices=devices[:n])
+
+
+def make_host_mesh(model: int = 1) -> Mesh:
+    """A small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto, AxisType.Auto))

@@ -1,0 +1,62 @@
+"""Serving launcher: batched prefill+decode with the KV-cache engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
+      --reduced --batch 4 --prompt-len 32 --gen-len 32 [--int8]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.models import build_model
+from repro.models.quant import quantize_params
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b", choices=ARCH_IDS)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--int8", action="store_true",
+                    help="weight-only int8 serving")
+    args = ap.parse_args()
+
+    cfg = (reduced_config(args.arch) if args.reduced
+           else get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    if args.int8:
+        params = quantize_params(params)
+        print("[serve] int8 weight-only quantization enabled")
+
+    engine = ServeEngine(model, params,
+                         max_len=args.prompt_len + args.gen_len + 8,
+                         batch=args.batch)
+    prompt = jax.random.randint(jax.random.key(1),
+                                (args.batch, args.prompt_len), 1,
+                                cfg.vocab_size)
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"image_embeds": jnp.ones(
+            (args.batch, cfg.num_image_tokens, cfg.d_model)) * 0.01}
+    if cfg.family == "audio":
+        extra = {"audio_frames": jnp.ones(
+            (args.batch, cfg.n_audio_ctx, cfg.d_model)) * 0.01}
+    t0 = time.perf_counter()
+    out = engine.generate(prompt, n_steps=args.gen_len, extra=extra)
+    jax.block_until_ready(out)
+    dt = time.perf_counter() - t0
+    print(f"[serve] {args.arch} batch={args.batch}: "
+          f"{args.gen_len * args.batch / dt:.1f} tok/s aggregate "
+          f"(incl. compile); sample: {out[0, :12].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

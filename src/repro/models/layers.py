@@ -1,0 +1,164 @@
+"""Shared layer zoo: norms, RoPE, embeddings, SwiGLU MLP.
+
+Convention: every module exposes ``init_*(key, ...) -> params`` plus a
+``*_specs(...) -> same-structure tree of logical-axis tuples`` used by the
+distribution layer (repro.parallel).  Apply functions are pure.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import constrain
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> Params:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm_specs() -> Params:
+    return {"scale": ("embed",)}
+
+
+def _rms_scale(x: jax.Array, eps: float) -> jax.Array:
+    """1/rms(x) with fp32 accumulation but WITHOUT materializing an fp32
+    copy of x: under scan+remat, an fp32 x becomes the saved residual and
+    doubles activation-checkpoint memory (see DESIGN.md §Perf)."""
+    ss = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)
+    var = ss / x.shape[-1]
+    return jax.lax.rsqrt(var + eps)[..., None]            # fp32 (..., 1)
+
+
+def rms_norm(x: jax.Array, params: Params, eps: float = 1e-5) -> jax.Array:
+    if x.dtype == jnp.float32:
+        r = _rms_scale(x, eps)
+        return x * r * params["scale"].astype(jnp.float32)
+    r = _rms_scale(x, eps).astype(x.dtype)
+    return x * r * params["scale"].astype(x.dtype)
+
+
+def rms_norm_nd(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """RMSNorm over the last dim with an explicit scale vector (qk-norm)."""
+    if x.dtype == jnp.float32:
+        r = _rms_scale(x, eps)
+        return x * r * scale.astype(jnp.float32)
+    r = _rms_scale(x, eps).astype(x.dtype)
+    return x * r * scale.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# linear
+# ---------------------------------------------------------------------------
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None) -> Params:
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    return {"w": w.astype(dtype)}
+
+
+def dense_specs(in_axis: str | None, out_axis: str | None) -> Params:
+    return {"w": (in_axis, out_axis)}
+
+
+def dense(x: jax.Array, params: Params) -> jax.Array:
+    if "w" not in params:  # int8 serving pack {"q","scale"} (models.quant)
+        from repro.models.quant import dequant
+        return x @ dequant(params, x.dtype)
+    return x @ params["w"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+def init_embedding(key, vocab: int, d: int, dtype) -> Params:
+    w = jax.random.normal(key, (vocab, d), dtype=jnp.float32) * 0.02
+    return {"table": w.astype(dtype)}
+
+
+def embedding_specs() -> Params:
+    return {"table": ("vocab", "embed")}
+
+
+def embed(tokens: jax.Array, params: Params, compute_dtype) -> jax.Array:
+    t = params["table"]
+    if isinstance(t, dict):   # int8 pack: gather rows, dequant per token
+        return (t["q"][tokens].astype(compute_dtype)
+                * t["scale"][tokens][..., None].astype(compute_dtype))
+    return t.astype(compute_dtype)[tokens]
+
+
+def unembed(x: jax.Array, params: Params) -> jax.Array:
+    """Project back to (padded) vocab logits."""
+    t = params["table"]
+    if isinstance(t, dict):
+        logits = x @ t["q"].astype(x.dtype).T
+        return logits * t["scale"].astype(x.dtype)[None, None, :]
+    return x @ t.astype(x.dtype).T
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)  # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    dtype = x.dtype
+    freqs = rope_frequencies(x.shape[-1], theta)          # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                   # (..., seq, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs (SwiGLU default; GELU 2-matrix for whisper)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, d_ff: int, dtype, mlp_type: str = "swiglu") -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if mlp_type == "gelu":
+        return {
+            "up": init_dense(k2, d, d_ff, dtype),
+            "down": init_dense(k3, d_ff, d, dtype, scale=d_ff ** -0.5),
+        }
+    return {
+        "gate": init_dense(k1, d, d_ff, dtype),
+        "up": init_dense(k2, d, d_ff, dtype),
+        "down": init_dense(k3, d_ff, d, dtype, scale=d_ff ** -0.5),
+    }
+
+
+def mlp_specs(mlp_type: str = "swiglu") -> Params:
+    p = {
+        "up": dense_specs("embed", "mlp"),
+        "down": dense_specs("mlp", "embed"),
+    }
+    if mlp_type != "gelu":
+        p["gate"] = dense_specs("embed", "mlp")
+    return p
+
+
+def mlp(x: jax.Array, params: Params) -> jax.Array:
+    if "gate" in params:
+        h = jax.nn.silu(dense(x, params["gate"])) * dense(x, params["up"])
+    else:
+        h = jax.nn.gelu(dense(x, params["up"]))
+    h = constrain(h, "batch", None, "mlp")
+    return dense(h, params["down"])

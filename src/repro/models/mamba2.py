@@ -1,0 +1,243 @@
+"""Mamba-2 block with SSD (state-space duality) — the TPU-adapted,
+matmul-rich chunked formulation [arXiv:2405.21060].
+
+Train/prefill use the chunked SSD algorithm (intra-chunk dense matmuls +
+inter-chunk state recurrence over n_chunks steps); decode uses the O(1)
+recurrent state update.  The chunked intra/inter einsums are the compute hot
+spot and have a Pallas kernel counterpart in repro.kernels.ssd_scan.
+
+Projection weights are split per component (z, x, B, C, dt) so tensor
+parallelism shards d_inner/heads cleanly (see DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dtype_of
+from repro.parallel.axes import constrain
+
+
+def dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return d_inner, nheads, conv_dim
+
+
+def init_mamba(key, cfg) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = dims(cfg)
+    gn = s.ngroups * s.d_state
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+
+    def w(k, shape, scale):
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(dtype)
+
+    sc = d ** -0.5
+    # dt bias initialized so softplus(dt_bias) spans [dt_min, dt_max]
+    u = jax.random.uniform(ks[6], (nheads,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(s.dt_max) - jnp.log(s.dt_min)) + jnp.log(s.dt_min))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "wz": w(ks[0], (d, d_inner), sc),
+        "wx": w(ks[1], (d, d_inner), sc),
+        "wB": w(ks[2], (d, gn), sc),
+        "wC": w(ks[3], (d, gn), sc),
+        "wdt": w(ks[4], (d, nheads), sc),
+        "out": w(ks[5], (d_inner, d), d_inner ** -0.5),
+        "conv_w": w(ks[7], (s.conv_kernel, conv_dim), conv_dim ** -0.5),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm_scale": jnp.ones((d_inner,), dtype),
+    }
+
+
+def mamba_specs(cfg) -> Params:
+    return {
+        "wz": ("embed", "mlp"),
+        "wx": ("embed", "mlp"),
+        "wB": ("embed", None),
+        "wC": ("embed", None),
+        "wdt": ("embed", "heads"),
+        "out": ("mlp", "embed"),
+        "conv_w": (None, None),   # tiny depthwise taps: replicated (crosses the
+        "conv_b": (None,),        # z/B/C component boundary if sharded)
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "norm_scale": ("mlp",),
+    }
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (B, S, C); w: (k, C) depthwise causal conv + SiLU."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # k is tiny (4): unrolled taps keep HLO simple
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out + b[None, None, :].astype(out.dtype))
+
+
+def _ssd_chunked(x, dt, A, B, C, D, chunk: int):
+    """Chunked SSD.  x:(b,s,h,p) dt:(b,s,h) A:(h,)<0  B,C:(b,s,n) D:(h,)
+    Returns y:(b,s,h,p) and final state (b,h,p,n)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = -(-s // chunk)
+    pad = nc * chunk - s
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    xc = x.reshape(b, nc, L, h, p)
+    dtc = dt.reshape(b, nc, L, h)
+    Bc = B.reshape(b, nc, L, n)
+    Cc = C.reshape(b, nc, L, n)
+
+    dA = dtc * A[None, None, None, :]                     # (b,nc,L,h) log-decay
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumulative
+
+    # --- intra-chunk (dense, matmul-rich) ---
+    S_lm = jnp.einsum("bcln,bcmn->bclm", Cc, Bc,
+                      preferred_element_type=jnp.float32)  # (b,nc,L,L)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,L,M,h)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    W = S_lm[..., None] * decay                           # (b,nc,L,M,h)
+    xdt = xc * dtc[..., None]                             # (b,nc,M,h,p)
+    y_intra = jnp.einsum("bclmh,bcmhp->bclhp", W, xdt,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states ---
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,nc,L,h)
+    states = jnp.einsum("bclh,bcln,bclhp->bchpn", decay_end * dtc, Bc, xc,
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (b,nc,h)
+
+    def body(hprev, inp):
+        cd, st = inp                                      # cd:(b,h) st:(b,h,p,n)
+        hnew = hprev * cd[:, :, None, None] + st
+        return hnew, hprev
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        body, h0,
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)            # (b,nc,h,p,n)
+
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, h_prevs, jnp.exp(cum),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(b, nc * L, h, p)[:, :s]
+    y = y + x[:, :s] * D[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def mamba_forward(
+    params: Params, x: jax.Array, cfg,
+    state: Dict[str, jax.Array] | None = None,
+    mode: str = "train",
+) -> Tuple[jax.Array, Dict[str, jax.Array] | None]:
+    """x: (B, S, d_model).
+
+    modes: ``train`` (no state), ``prefill`` (returns the final recurrent +
+    conv state for subsequent decode), ``decode`` (state in/out, S == 1).
+    """
+    s = cfg.ssm
+    Bsz, S, d = x.shape
+    d_inner, nheads, conv_dim = dims(cfg)
+    n = s.ngroups * s.d_state
+    cdt = x.dtype
+
+    from repro.models.quant import matmul_q
+    z = matmul_q(x, params["wz"])
+    xs = matmul_q(x, params["wx"])
+    Bp = matmul_q(x, params["wB"])
+    Cp = matmul_q(x, params["wC"])
+    dt = matmul_q(x, params["wdt"])
+    xs = constrain(xs, "batch", None, "mlp")
+    z = constrain(z, "batch", None, "mlp")
+
+    xbc = jnp.concatenate([xs, Bp, Cp], axis=-1)          # (B,S,conv_dim)
+
+    new_state = None
+    if mode != "decode":
+        k = s.conv_kernel
+        conv_tail = jnp.pad(xbc, ((0, 0), (max(k - 1 - S, 0), 0), (0, 0)))[:, -(k - 1):]
+        xbc = _causal_depthwise_conv(
+            xbc, params["conv_w"].astype(cdt), params["conv_b"])
+    else:
+        # decode: roll the conv window (S == 1)
+        window = jnp.concatenate([state["conv"], xbc], axis=1)  # (B,k,conv)
+        w = params["conv_w"].astype(cdt)
+        out = (window * w[None, :, :]).sum(axis=1, keepdims=True)
+        xbc = jax.nn.silu(out + params["conv_b"][None, None, :].astype(cdt))
+        new_conv = window[:, 1:]
+
+    xs = xbc[..., :d_inner]
+    Bp = xbc[..., d_inner : d_inner + n]
+    Cp = xbc[..., d_inner + n :]
+
+    A = -jnp.exp(params["A_log"])                          # (h,) < 0
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
+    xh = xs.reshape(Bsz, S, nheads, s.head_dim)
+
+    if mode != "decode":
+        y, h_final = _ssd_chunked(
+            xh.astype(jnp.float32), dt, A,
+            Bp.astype(jnp.float32), Cp.astype(jnp.float32),
+            params["D"], cfg.ssm.chunk_size)
+        if mode == "prefill":
+            new_state = {"h": h_final, "conv": conv_tail}
+    else:
+        # recurrent step: h' = h * exp(dt*A) + dt * B x
+        h_st = state["h"]                                  # (B,h,p,n) f32
+        dt1 = dt[:, 0]                                     # (B,h)
+        decay = jnp.exp(dt1 * A[None, :])
+        xb = jnp.einsum("bhp,bn->bhpn", xh[:, 0].astype(jnp.float32),
+                        Bp[:, 0].astype(jnp.float32))
+        h_new = h_st * decay[:, :, None, None] + dt1[:, :, None, None] * xb
+        y = jnp.einsum("bn,bhpn->bhp", Cp[:, 0].astype(jnp.float32), h_new)
+        y = y + xh[:, 0].astype(jnp.float32) * params["D"][None, :, None]
+        y = y[:, None]                                     # (B,1,h,p)
+        new_state = {"h": h_new, "conv": new_conv}
+
+    y = y.reshape(Bsz, S, d_inner).astype(cdt)
+    # gated RMSNorm then out-projection (fp32-accumulated, no fp32 copy)
+    from repro.models.layers import _rms_scale
+    g = y * jax.nn.silu(z)
+    r = _rms_scale(g, cfg.norm_eps)
+    g = g * r.astype(cdt) * params["norm_scale"].astype(cdt)
+    out = matmul_q(g, params["out"])
+    return out, new_state
+
+
+def init_state(cfg, batch: int) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    d_inner, nheads, conv_dim = dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nheads, s.head_dim, s.ngroups * s.d_state),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_kernel - 1, conv_dim),
+                          dtype_of(cfg.compute_dtype)),
+    }
+
+
+def state_specs(cfg) -> Dict[str, tuple]:
+    return {
+        "h": ("batch", "heads", None, None),
+        "conv": ("batch", None, "mlp"),
+    }

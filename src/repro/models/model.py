@@ -1,0 +1,400 @@
+"""The unified LM covering all 10 assigned architectures.
+
+``LM(cfg)`` builds init/forward/cache machinery from a ``ModelConfig``:
+
+  family   stack
+  -------  -----------------------------------------------------------
+  dense    scan over N identical (attn + MLP) layers
+  moe      scan over N identical (attn + MoE) layers
+  ssm      scan over N Mamba-2 SSD blocks (no FFN; d_ff = 0)
+  hybrid   scan over N/8 Jamba periods (1 attn : 7 mamba, MoE alternating)
+  vlm      scan over N/5 periods (4 self-attn + 1 gated cross-attn layer)
+  audio    whisper enc-dec: encoder scan + decoder scan (self + cross)
+
+Modes: ``train`` (logits over full seq), ``prefill`` (logits + populated
+cache), ``decode`` (1-token step against the cache).  ``extra`` carries stub
+frontend embeddings: ``image_embeds`` (B, T_img, d) for vlm,
+``audio_frames`` (B, n_audio_ctx, d) for audio.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, blocks, layers, mamba2
+from repro.models.layers import dtype_of
+from repro.parallel.axes import constrain
+
+Params = Dict[str, Any]
+
+
+def _tree_stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(lambda t: t[i], tree)
+
+
+class LM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family == "hybrid":
+            assert cfg.n_layers % cfg.attn_period == 0
+            self.n_periods = cfg.n_layers // cfg.attn_period
+        elif cfg.family == "vlm":
+            assert cfg.n_layers % cfg.cross_attn_period == 0
+            self.n_periods = cfg.n_layers // cfg.cross_attn_period
+        else:
+            self.n_periods = cfg.n_layers
+
+    # ------------------------------------------------------------------
+    # params
+    # ------------------------------------------------------------------
+    def init_params(self, key) -> Params:
+        cfg = self.cfg
+        ke, ku, ks, kenc = jax.random.split(key, 4)
+        dtype = dtype_of(cfg.param_dtype)
+        p: Params = {
+            "embed": layers.init_embedding(ke, cfg.padded_vocab, cfg.d_model,
+                                           dtype),
+            "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = layers.init_embedding(ku, cfg.padded_vocab,
+                                                 cfg.d_model, dtype)
+        p["stack"] = blocks.stack_init(ks, self.n_periods, self._init_period)
+        if cfg.is_encdec:
+            p["encoder"] = {
+                "stack": blocks.stack_init(
+                    kenc, cfg.n_encoder_layers,
+                    lambda k: blocks.init_attn_layer(k, cfg, use_moe=False)),
+                "final_norm": layers.init_rmsnorm(cfg.d_model, dtype),
+            }
+        return p
+
+    def _init_period(self, key) -> Params:
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            return blocks.init_attn_layer(key, cfg, use_moe=cfg.layer_uses_moe(0))
+        if fam == "ssm":
+            return blocks.init_mamba_layer(key, cfg, with_ffn=cfg.d_ff > 0)
+        if fam == "hybrid":
+            ks = jax.random.split(key, cfg.attn_period)
+            subs = {}
+            for j in range(cfg.attn_period):
+                use_moe = cfg.layer_uses_moe(j)
+                if cfg.layer_kind(j) == "attn":
+                    subs[f"s{j}"] = blocks.init_attn_layer(ks[j], cfg, use_moe)
+                else:
+                    subs[f"s{j}"] = blocks.init_mamba_layer(ks[j], cfg, use_moe)
+            return subs
+        if fam == "vlm":
+            per = cfg.cross_attn_period
+            ks = jax.random.split(key, per)
+            subs = {
+                f"s{j}": blocks.init_attn_layer(ks[j], cfg, use_moe=False)
+                for j in range(per - 1)
+            }
+            subs["cross"] = blocks.init_cross_layer(ks[-1], cfg)
+            return subs
+        if fam == "audio":
+            k1, k2, k3 = jax.random.split(key, 3)
+            p = blocks.init_attn_layer(k1, cfg, use_moe=False)
+            p["lnx"] = layers.init_rmsnorm(cfg.d_model, dtype_of(cfg.param_dtype))
+            p["xattn"] = attention.init_attention(k3, cfg, cross=False)
+            return p
+        raise ValueError(fam)
+
+    def param_specs(self) -> Params:
+        cfg = self.cfg
+        p: Params = {
+            "embed": layers.embedding_specs(),
+            "final_norm": layers.rmsnorm_specs(),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = layers.embedding_specs()
+        p["stack"] = blocks.stack_specs(self._period_specs())
+        if cfg.is_encdec:
+            p["encoder"] = {
+                "stack": blocks.stack_specs(
+                    blocks.attn_layer_specs(cfg, use_moe=False)),
+                "final_norm": layers.rmsnorm_specs(),
+            }
+        return p
+
+    def _period_specs(self) -> Params:
+        cfg = self.cfg
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            return blocks.attn_layer_specs(cfg, use_moe=cfg.layer_uses_moe(0))
+        if fam == "ssm":
+            return blocks.mamba_layer_specs(cfg, with_ffn=cfg.d_ff > 0)
+        if fam == "hybrid":
+            subs = {}
+            for j in range(cfg.attn_period):
+                use_moe = cfg.layer_uses_moe(j)
+                if cfg.layer_kind(j) == "attn":
+                    subs[f"s{j}"] = blocks.attn_layer_specs(cfg, use_moe)
+                else:
+                    subs[f"s{j}"] = blocks.mamba_layer_specs(cfg, use_moe)
+            return subs
+        if fam == "vlm":
+            per = cfg.cross_attn_period
+            subs = {
+                f"s{j}": blocks.attn_layer_specs(cfg, use_moe=False)
+                for j in range(per - 1)
+            }
+            subs["cross"] = blocks.cross_layer_specs(cfg)
+            return subs
+        if fam == "audio":
+            p = blocks.attn_layer_specs(cfg, use_moe=False)
+            p["lnx"] = layers.rmsnorm_specs()
+            p["xattn"] = attention.attention_specs(cfg, cross=False)
+            return p
+        raise ValueError(fam)
+
+    # ------------------------------------------------------------------
+    # cache
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int) -> Params:
+        cfg = self.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        n = self.n_periods
+        fam = cfg.family
+
+        def attn_c():
+            return attention.init_cache(cfg, batch, max_len, dtype)
+
+        def rep(tree, k):
+            return jax.tree.map(
+                lambda t: jnp.broadcast_to(t, (k,) + t.shape).copy(), tree)
+
+        if fam in ("dense", "moe"):
+            return {"layers": rep(attn_c(), n)}
+        if fam == "ssm":
+            return {"layers": rep(mamba2.init_state(cfg, batch), n)}
+        if fam == "hybrid":
+            n_mamba = cfg.attn_period - 1
+            return {"periods": {
+                "attn": rep(attn_c(), n),
+                "ssm": rep(rep(mamba2.init_state(cfg, batch), n_mamba), n),
+            }}
+        if fam == "vlm":
+            h, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+            per = cfg.cross_attn_period
+            return {"periods": {
+                "self": rep(rep(attn_c(), per - 1), n),
+                "cross_k": jnp.zeros((n, batch, cfg.num_image_tokens, nkv, h), dtype),
+                "cross_v": jnp.zeros((n, batch, cfg.num_image_tokens, nkv, h), dtype),
+            }}
+        if fam == "audio":
+            h, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+            return {"layers": {
+                "self": rep(attn_c(), n),
+                "cross_k": jnp.zeros((n, batch, cfg.n_audio_ctx, nkv, h), dtype),
+                "cross_v": jnp.zeros((n, batch, cfg.n_audio_ctx, nkv, h), dtype),
+            }}
+        raise ValueError(fam)
+
+    def cache_specs(self) -> Params:
+        cfg = self.cfg
+        fam = cfg.family
+
+        def rep(tree):
+            return blocks.stack_specs(tree)
+
+        a = attention.cache_specs(cfg)
+        if fam in ("dense", "moe"):
+            return {"layers": rep(a)}
+        if fam == "ssm":
+            return {"layers": rep(mamba2.state_specs(cfg))}
+        if fam == "hybrid":
+            return {"periods": {
+                "attn": rep(a),
+                "ssm": rep(rep(mamba2.state_specs(cfg))),
+            }}
+        if fam == "vlm":
+            return {"periods": {
+                "self": rep(rep(a)),
+                "cross_k": (None, "batch", "image_tokens", "kv_heads", None),
+                "cross_v": (None, "batch", "image_tokens", "kv_heads", None),
+            }}
+        if fam == "audio":
+            return {"layers": {
+                "self": rep(a),
+                "cross_k": (None, "batch", "audio_ctx", "kv_heads", None),
+                "cross_v": (None, "batch", "audio_ctx", "kv_heads", None),
+            }}
+        raise ValueError(fam)
+
+    # ------------------------------------------------------------------
+    # forward
+    # ------------------------------------------------------------------
+    def forward(
+        self,
+        params: Params,
+        tokens: jax.Array,              # (B, S) int32
+        positions: jax.Array,           # (B, S) int32
+        *,
+        mode: str = "train",
+        cache: Optional[Params] = None,
+        extra: Optional[Dict[str, jax.Array]] = None,
+    ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
+        cfg = self.cfg
+        x = layers.embed(tokens, params["embed"], dtype_of(cfg.compute_dtype))
+        x = constrain(x, "batch", None, None)
+
+        ctx = None
+        if cfg.family == "vlm" and mode != "decode":
+            ctx = extra["image_embeds"].astype(x.dtype)
+        if cfg.family == "audio":
+            enc_aux = jnp.zeros((), jnp.float32)
+            if mode != "decode":
+                enc = extra["audio_frames"].astype(x.dtype)
+                B = enc.shape[0]
+                enc_pos = jnp.broadcast_to(
+                    jnp.arange(enc.shape[1])[None], enc.shape[:2])
+
+                def enc_step(h, p, _c):
+                    return blocks.attn_layer(
+                        p, h, cfg, mode="train", positions=enc_pos,
+                        causal=False)
+
+                enc, _, enc_aux = blocks.run_stack(
+                    enc, params["encoder"]["stack"], enc_step,
+                    n_steps=cfg.n_encoder_layers, remat=cfg.remat)
+                enc = layers.rms_norm(enc, params["encoder"]["final_norm"],
+                                      cfg.norm_eps)
+                ctx = enc
+
+        step = functools.partial(
+            self._period_step, mode=mode, positions=positions, ctx=ctx)
+        stacked_cache = None
+        if cache is not None:
+            stacked_cache = cache.get("layers") or cache.get("periods")
+
+        x, new_stacked, aux = blocks.run_stack(
+            x, params["stack"], step, stacked_cache=stacked_cache,
+            n_steps=self.n_periods, remat=cfg.remat if mode == "train" else "none")
+
+        if cfg.family == "audio" and mode != "decode":
+            aux = aux + enc_aux
+
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = layers.unembed(x, emb)
+        logits = constrain(logits, "batch", None, "vocab")
+
+        new_cache = None
+        if cache is not None:
+            key = "layers" if "layers" in cache else "periods"
+            new_cache = {key: new_stacked}
+        return logits.astype(jnp.float32), new_cache, aux
+
+    # ------------------------------------------------------------------
+    def _period_step(self, x, p, c, *, mode, positions, ctx):
+        """One scan step: a single layer (homogeneous) or one period."""
+        cfg = self.cfg
+        fam = cfg.family
+        zero = jnp.zeros((), jnp.float32)
+
+        if fam in ("dense", "moe"):
+            x, nc, aux = blocks.attn_layer(
+                p, x, cfg, mode=mode, positions=positions,
+                cache=c if mode != "train" else None)
+            return x, nc, aux
+
+        if fam == "ssm":
+            x, ns, aux = blocks.mamba_layer(p, x, cfg, mode=mode, state=c)
+            return x, ns, aux
+
+        if fam == "hybrid":
+            aux = zero
+            new_attn, new_ssm = None, []
+            midx = 0
+            for j in range(cfg.attn_period):
+                sub = p[f"s{j}"]
+                if cfg.layer_kind(j) == "attn":
+                    x, new_attn, a = blocks.attn_layer(
+                        sub, x, cfg, mode=mode, positions=positions,
+                        cache=c["attn"] if mode != "train" else None)
+                else:
+                    st = (_tree_index(c["ssm"], midx)
+                          if mode == "decode" else None)
+                    x, ns, a = blocks.mamba_layer(sub, x, cfg, mode=mode,
+                                                  state=st)
+                    new_ssm.append(ns)
+                    midx += 1
+                aux = aux + a
+            nc = None
+            if mode != "train":
+                nc = {"attn": new_attn, "ssm": _tree_stack(new_ssm)}
+            return x, nc, aux
+
+        if fam == "vlm":
+            aux = zero
+            per = cfg.cross_attn_period
+            new_self = []
+            for j in range(per - 1):
+                sc = (_tree_index(c["self"], j) if mode != "train" else None)
+                x, ns, a = blocks.attn_layer(
+                    p[f"s{j}"], x, cfg, mode=mode, positions=positions,
+                    cache=sc)
+                new_self.append(ns)
+                aux = aux + a
+            if mode == "decode":
+                x, _, a = blocks.cross_layer(
+                    p["cross"], x, cfg,
+                    cached_kv=(c["cross_k"], c["cross_v"]))
+                kv = (c["cross_k"], c["cross_v"])
+            else:
+                x, kv, a = blocks.cross_layer(p["cross"], x, cfg, ctx=ctx)
+            aux = aux + a
+            nc = None
+            if mode != "train":
+                nc = {"self": _tree_stack(new_self),
+                      "cross_k": kv[0], "cross_v": kv[1]}
+            return x, nc, aux
+
+        if fam == "audio":
+            # decoder layer: self-attn + cross-attn + mlp
+            h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+            if mode == "train":
+                a_out = attention.attn_train(p["attn"], h, cfg,
+                                             positions=positions)
+                new_self = None
+            elif mode == "prefill":
+                a_out, new_self = attention.attn_prefill(
+                    p["attn"], h, cfg, positions=positions, cache=c["self"])
+            else:
+                a_out, new_self = attention.attn_decode(
+                    p["attn"], h, cfg, positions=positions, cache=c["self"])
+            x = x + a_out
+            h = layers.rms_norm(x, p["lnx"], cfg.norm_eps)
+            if mode == "decode":
+                xa, _ = attention.cross_attn(
+                    p["xattn"], h, cfg,
+                    cached_kv=(c["cross_k"], c["cross_v"]))
+                kv = (c["cross_k"], c["cross_v"])
+            else:
+                xa, kv = attention.cross_attn(p["xattn"], h, cfg, ctx=ctx)
+            x = x + xa
+            h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+            f, aux = blocks._mlp_or_moe(p, h, cfg)
+            x = x + f
+            nc = None
+            if mode != "train":
+                nc = {"self": new_self, "cross_k": kv[0], "cross_v": kv[1]}
+            return x, nc, aux
+
+        raise ValueError(fam)
+
+
+def build_model(cfg: ModelConfig) -> LM:
+    return LM(cfg)

@@ -1,0 +1,143 @@
+"""Top-k MoE with group-local sort-based dispatch (dropless up to capacity).
+
+Tokens are grouped by sequence (the group dim shards over ``batch`` mesh
+axes), each group sorts its (token, choice) pairs by expert id, scatters into
+an (E, C, d) capacity buffer, runs the expert SwiGLU as stacked einsums, and
+gathers back.  The sort is group-local so it never induces a cross-device
+collective; the expert einsum is where EP (experts over the ``model`` axis)
+happens.  When num_experts does not divide the model axis (grok: 8 experts,
+16-way axis), the rule set falls back to TP-within-expert on d_ff
+(``expert_mlp`` axis) — see parallel/sharding.py.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, dtype_of
+from repro.parallel.axes import constrain
+
+
+def init_moe(key, cfg) -> Params:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.expert_d_ff, m.num_experts
+    dtype = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    scale_in, scale_out = d ** -0.5, f ** -0.5
+
+    def w(k, shape, s):
+        return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+
+    return {
+        "router": w(ks[0], (d, e), scale_in).astype(jnp.float32),
+        "gate": w(ks[1], (e, d, f), scale_in),
+        "up": w(ks[2], (e, d, f), scale_in),
+        "down": w(ks[3], (e, f, d), scale_out),
+    }
+
+
+def moe_specs(cfg) -> Params:
+    return {
+        "router": ("embed", None),
+        "gate": ("expert", "embed", "expert_mlp"),
+        "up": ("expert", "embed", "expert_mlp"),
+        "down": ("expert", "expert_mlp", "embed"),
+    }
+
+
+def _capacity(tokens_per_group: int, cfg) -> int:
+    m = cfg.moe
+    c = math.ceil(m.top_k * tokens_per_group / m.num_experts * m.capacity_factor)
+    return max(1, c)
+
+
+def route(x_f32: jax.Array, router: jax.Array, top_k: int):
+    """x_f32: (G, Sg, d).  Returns (gates (G,Sg,k), ids (G,Sg,k), probs)."""
+    logits = x_f32 @ router                                 # (G,Sg,E) f32
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, top_k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    return gates, ids, probs
+
+
+def aux_load_balance_loss(probs: jax.Array, ids: jax.Array, num_experts: int):
+    """Switch-style load-balance loss: E * sum_e f_e * p_e."""
+    e = num_experts
+    onehot = jax.nn.one_hot(ids, e, dtype=jnp.float32)      # (G,Sg,k,E)
+    frac = onehot.sum(axis=(0, 1, 2)) / jnp.maximum(onehot.sum(), 1.0)
+    mean_prob = probs.mean(axis=(0, 1))
+    return e * jnp.sum(frac * mean_prob)
+
+
+def _dispatch_indices(ids: jax.Array, num_experts: int, capacity: int):
+    """ids: (G, Sg, k).  Group-local sort dispatch bookkeeping."""
+    G, Sg, k = ids.shape
+    T = Sg * k
+    flat = ids.reshape(G, T)
+    order = jnp.argsort(flat, axis=-1, stable=True)          # (G,T)
+    sorted_e = jnp.take_along_axis(flat, order, axis=-1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(num_experts)))(sorted_e)
+    pos = jnp.arange(T)[None] - jnp.take_along_axis(starts, sorted_e, -1)
+    keep = pos < capacity
+    dest = jnp.where(keep, sorted_e * capacity + pos, num_experts * capacity)
+    token = order // k                                        # source token
+    choice = order % k                                        # which top-k slot
+    return order, dest, token, choice, keep
+
+
+def moe_apply(
+    params: Params, x: jax.Array, cfg
+) -> Tuple[jax.Array, jax.Array]:
+    """x: (G, Sg, d) grouped tokens.  Returns (y, aux_loss)."""
+    G, Sg, d = x.shape
+    m = cfg.moe
+    E, k = m.num_experts, m.top_k
+    C = _capacity(Sg, cfg)
+
+    gates, ids, probs = route(x.astype(jnp.float32), params["router"], k)
+    aux = aux_load_balance_loss(probs, ids, E)
+
+    order, dest, token, choice, keep = _dispatch_indices(ids, E, C)
+
+    def scatter_group(xg, dg, tg):
+        return jnp.zeros((E * C, d), xg.dtype).at[dg].set(
+            xg[tg], mode="drop")
+
+    buf = jax.vmap(scatter_group)(x, dest, token)            # (G, E*C, d)
+    buf = buf.reshape(G, E, C, d)
+    buf = constrain(buf, "batch", "expert", None, None)
+
+    # expert SwiGLU (stacked einsums; EP over "expert" or TP over "expert_mlp")
+    from repro.models.quant import dequant, is_qpack
+
+    def w_of(key):
+        p = params[key]
+        return dequant(p, x.dtype) if is_qpack(p) else p.astype(x.dtype)
+
+    wg, wu, wd = w_of("gate"), w_of("up"), w_of("down")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, wg)) * jnp.einsum(
+        "gecd,edf->gecf", buf, wu)
+    h = constrain(h, "batch", "expert", None, "expert_mlp")
+    out = jnp.einsum("gecf,efd->gecd", h, wd)                # (G,E,C,d)
+    out = constrain(out, "batch", "expert", None, None)
+    out = out.reshape(G, E * C, d)
+
+    def gather_group(og, dg, kg):
+        vals = og.at[dg].get(mode="fill", fill_value=0.0)    # (T, d)
+        return jnp.where(kg[:, None], vals, 0.0)
+
+    routed = jax.vmap(gather_group)(out, dest, keep)         # (G, T, d) sorted order
+    # un-sort back to (token, choice) layout and combine with gates
+    gate_flat = jnp.take_along_axis(gates.reshape(G, Sg * k), order, axis=-1)
+    contrib = routed * gate_flat[..., None].astype(routed.dtype)
+
+    def unsort_group(cg, og):
+        return jnp.zeros((Sg * k, d), cg.dtype).at[og].set(cg)
+
+    y = jax.vmap(unsort_group)(contrib, order)               # (G, Sg*k, d)
+    y = y.reshape(G, Sg, k, d).sum(axis=2)
+    return y, aux

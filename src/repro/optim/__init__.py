@@ -1,0 +1,8 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+    opt_state_specs,
+)
+from repro.optim.schedule import warmup_cosine  # noqa: F401

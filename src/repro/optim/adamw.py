@@ -1,0 +1,82 @@
+"""Sharded AdamW with decoupled weight decay and global-norm clipping.
+
+Moments are kept in fp32 regardless of the (typically bf16) param dtype;
+the update is computed in fp32 and cast back.  Moment trees inherit the
+parameter sharding specs (same logical axes), so optimizer state shards
+with the model under pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: Callable[[jax.Array], jax.Array] | float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def opt_state_specs(param_specs) -> Dict[str, Any]:
+    return {
+        "m": param_specs,
+        "v": param_specs,
+        "count": (),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(
+    grads, opt_state, params, cfg: AdamWConfig
+) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+    else:
+        scale = jnp.ones(())
+    lr = cfg.lr(count) if callable(cfg.lr) else jnp.asarray(cfg.lr)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_new / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vhat = v_new / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        pf = p.astype(jnp.float32)
+        if cfg.weight_decay > 0 and p.ndim >= 2:   # decay matrices only
+            step = step + cfg.weight_decay * pf
+        return (pf - lr * step).astype(p.dtype), m_new, v_new
+
+    flat = jax.tree.map(upd, grads, opt_state["m"], opt_state["v"], params)
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, new_state, metrics

@@ -1,0 +1,51 @@
+"""Int8 gradient compression with error feedback — the distributed-
+optimization trick for the DP all-reduce at 1000+ node scale.
+
+``compress``/``decompress`` implement per-tensor symmetric int8 quantization;
+``ef_compress_tree`` applies it across a gradient pytree carrying an error-
+feedback residual so the quantization error is re-injected next step
+(guaranteeing convergence; see 1-bit Adam / EF-SGD literature).  On a real
+multi-pod mesh the int8 payload is what crosses the DCI links: the serve/
+train steps expose ``grad_compression=int8`` which wraps the gradient
+reduction in a shard_map psum over the ("pod",) axis so only 1 byte/param
+crosses pods instead of 2 (bf16) or 4 (fp32).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8.  Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, err):
+    """Quantize grads+err, return (dequantized grads, new error residual)."""
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q, s = compress(gf)
+        deq = decompress(q, s)
+        return deq, gf - deq
+
+    pairs = jax.tree.map(one, grads, err)
+    deq = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree.map(lambda t: t[1], pairs,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return deq, new_err
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

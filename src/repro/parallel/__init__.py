@@ -1,0 +1,9 @@
+from repro.parallel.axes import (  # noqa: F401
+    DEFAULT_RULES,
+    constrain,
+    named_sharding,
+    resolve_spec,
+    sharding_ctx,
+    tree_shardings,
+)
+from repro.parallel.sharding import rules_for  # noqa: F401

@@ -1,0 +1,160 @@
+"""Logical-axis sharding: model code names axes logically ("batch", "mlp",
+"heads", ...); a context-installed rule set maps them to physical mesh axes.
+
+The resolver enforces divisibility: a logical axis whose rule maps to a mesh
+axis that does not divide the tensor dim is dropped (replicated) and the
+decision is recorded — e.g. phi3-medium's 10 KV heads on a 16-way model axis.
+This is the framework's portable-performance posture: the same model code
+lowers on any mesh, and every forced replication is surfaced to the roofline
+report instead of failing.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisName = Union[str, None]
+Rules = Dict[str, Union[str, Tuple[str, ...], None]]
+
+# Default physical rules for the production meshes in launch/mesh.py.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,            # decode hillclimb: map to "model" for SP-KV
+    "embed": None,
+    "heads": "model",
+    "kv_heads": "model",       # dropped automatically when not divisible
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "expert_mlp": None,        # grok fallback: experts too few -> TP on d_ff
+    "state": None,
+    "conv": None,
+    "layers": None,
+    "image_tokens": None,
+    "audio_ctx": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[Rules] = None
+        self.decisions: List[str] = []
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh, rules: Optional[Rules] = None):
+    """Install (mesh, rules) for the duration of a trace/lower call."""
+    prev = (_CTX.mesh, _CTX.rules, _CTX.decisions)
+    _CTX.mesh, _CTX.rules, _CTX.decisions = mesh, dict(rules or DEFAULT_RULES), []
+    try:
+        yield _CTX
+    finally:
+        _CTX.mesh, _CTX.rules, _CTX.decisions = prev
+
+
+def active() -> bool:
+    return _CTX.mesh is not None
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def rule_axes(name: str) -> Tuple[str, ...]:
+    """Mesh axes a logical axis maps to under the active rules (or ())."""
+    if not active():
+        return ()
+    phys = (_CTX.rules or {}).get(name)
+    if phys is None:
+        return ()
+    axes = phys if isinstance(phys, tuple) else (phys,)
+    return tuple(a for a in axes if a in _CTX.mesh.shape)
+
+
+def decisions() -> List[str]:
+    return list(_CTX.decisions)
+
+
+def _mesh_axis_size(mesh: Mesh, axis: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def resolve_spec(
+    logical: Sequence[AxisName],
+    shape: Sequence[int],
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Rules] = None,
+    record: bool = True,
+) -> P:
+    """Map logical axis names to a PartitionSpec, dropping non-divisible axes."""
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules or DEFAULT_RULES
+    assert mesh is not None, "resolve_spec needs an active sharding_ctx or mesh"
+    out, used = [], set()
+    for dim, name in zip(shape, logical):
+        phys = rules.get(name) if name else None
+        if phys is None:
+            out.append(None)
+            continue
+        axes = phys if isinstance(phys, tuple) else (phys,)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes:
+            out.append(None)
+            continue
+        if any(a in used for a in axes):
+            out.append(None)  # a mesh axis may appear only once per spec
+            continue
+        size = _mesh_axis_size(mesh, axes)
+        if dim % size != 0:
+            if record and _CTX.decisions is not None:
+                _CTX.decisions.append(
+                    f"replicated logical axis {name!r} (dim {dim}) — not divisible "
+                    f"by mesh axes {axes} (size {size})"
+                )
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x: jax.Array, *logical: AxisName) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names; no-op w/o context."""
+    if not active():
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"constrain: {len(logical)} axes for rank-{x.ndim} array")
+    spec = resolve_spec(logical, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
+
+
+def named_sharding(logical: Sequence[AxisName], shape: Sequence[int]) -> NamedSharding:
+    assert active()
+    return NamedSharding(_CTX.mesh, resolve_spec(logical, shape))
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Mesh, rules: Optional[Rules] = None):
+    """Build a NamedSharding pytree from (logical-spec tree, ShapeDtype tree)."""
+    rules = dict(rules or DEFAULT_RULES)
+
+    def one(spec, sds):
+        return NamedSharding(mesh, resolve_spec(spec, sds.shape, mesh, rules))
+
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=lambda s: isinstance(s, tuple))

@@ -1,0 +1,58 @@
+"""Per-architecture sharding rule selection.
+
+``rules_for(cfg, mesh)`` starts from ``DEFAULT_RULES`` and adapts to the
+architecture × mesh combination:
+
+  * MoE whose expert count divides the ``model`` axis -> pure EP
+    (``expert -> model``); otherwise TP-within-expert
+    (``expert_mlp -> model``), e.g. grok-1's 8 experts on a 16-way axis.
+  * Tiny models (whisper-base) replicate attention projections rather than
+    splitting 64-wide head fragments across 16 devices.
+
+Divisibility of individual tensor dims is still enforced downstream by
+``resolve_spec`` — these rules set intent; the resolver records any forced
+replication for the roofline report.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig
+from repro.parallel.axes import DEFAULT_RULES, Rules
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def rules_for(cfg: ModelConfig, mesh: Mesh, *, sp_kv: bool = False) -> Rules:
+    rules: Rules = dict(DEFAULT_RULES)
+    tp = model_axis_size(mesh)
+
+    if cfg.moe is not None:
+        if cfg.moe.num_experts % tp == 0:
+            rules["expert"] = "model"
+            rules["expert_mlp"] = None
+        else:
+            rules["expert"] = None
+            rules["expert_mlp"] = "model"
+
+    # tiny attention (whisper-base: 8 heads x 64 dims): replicate attention
+    # instead of splitting sub-head fragments across the model axis.
+    if cfg.n_heads and cfg.n_heads * cfg.resolved_head_dim < 128 * tp:
+        rules["heads"] = None
+        rules["kv_heads"] = None
+
+    # sequence-sharded KV cache for long-context decode (hillclimb lever):
+    # the cache length shards over "model" (flash-decoding partial-softmax
+    # combine in attention.attn_decode).  Projection weights KEEP their
+    # head sharding — the shard_map boundary all-gathers only the per-token
+    # q/k/v activations (O(B·N·H) ≈ 1 MiB), not the weights; replicating
+    # the weights instead was a measured 17 GiB/dev regression on
+    # llama-90b.  Attention-free archs skip the rule (no KV cache).
+    if sp_kv and cfg.n_heads > 0:
+        rules["kv_seq"] = "model"
+
+    return rules

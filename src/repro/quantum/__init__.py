@@ -1,0 +1,1 @@
+from repro.quantum import gates, qsim  # noqa: F401

@@ -1,0 +1,186 @@
+"""State-vector quantum simulator — the paper's §6 product-level study.
+
+Three implementations x two memory layouts reproduce the Qsim lesson:
+
+  layouts:
+    * ``interleaved`` — amplitudes stored (2^n, 2) with re/im adjacent
+      (Qsim's layout; puts the complex pair on the fastest axis and
+      defeats lane vectorization — on TPU the 2-wide last dim wastes
+      126/128 lanes).
+    * ``planar``      — separate re/im planes (the VLEN/lane-adaptive
+      layout the paper's hand-intrinsics port uses).
+
+  versions:
+    * ``nonvec``  — fori_loop over amplitude pair groups (scalar issue).
+    * ``autovec`` — idiomatic jnp reshape/einsum (the compiler column).
+    * ``kernel``  — repro.kernels.qsim_gate Pallas kernel (planar only —
+      the intrinsics column).
+
+All versions share gates.py circuits and are cross-checked in tests
+(including unitarity).  The distributed simulator lives in
+repro.quantum.distributed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quantum.gates import Gate
+
+
+def init_state(n_qubits: int) -> jnp.ndarray:
+    state = jnp.zeros((2 ** n_qubits,), jnp.complex64)
+    return state.at[0].set(1.0 + 0j)
+
+
+# ---------------------------------------------------------------------------
+# autovec (jnp) — works on complex, interleaved or planar float pairs
+# ---------------------------------------------------------------------------
+def apply_gate_complex(state: jnp.ndarray, mat: np.ndarray, qubit: int,
+                       control: int | None = None) -> jnp.ndarray:
+    n = state.shape[0]
+    stride = 1 << qubit
+    g = jnp.asarray(mat)
+    s3 = state.reshape(n // (2 * stride), 2, stride)
+    a0, a1 = s3[:, 0, :], s3[:, 1, :]
+    n0 = g[0, 0] * a0 + g[0, 1] * a1
+    n1 = g[1, 0] * a0 + g[1, 1] * a1
+    new = jnp.stack([n0, n1], 1).reshape(n)
+    if control is not None:
+        # apply only where the control bit is 1
+        idx = jnp.arange(n)
+        cmask = (idx >> control) & 1
+        new = jnp.where(cmask == 1, new, state)
+    return new
+
+
+def run_autovec_complex(state, circuit: List[Gate]):
+    for g in circuit:
+        state = apply_gate_complex(state, g.matrix, g.qubit, g.control)
+    return state
+
+
+def apply_gate_interleaved(state_ri: jnp.ndarray, mat: np.ndarray,
+                           qubit: int, control: int | None = None):
+    """state_ri: (2^n, 2) float32 — re/im interleaved on the LAST axis
+    (the autovectorization-hostile layout)."""
+    n = state_ri.shape[0]
+    stride = 1 << qubit
+    s = state_ri.reshape(n // (2 * stride), 2, stride, 2)
+    a0re, a0im = s[:, 0, :, 0], s[:, 0, :, 1]
+    a1re, a1im = s[:, 1, :, 0], s[:, 1, :, 1]
+    g = np.asarray(mat)
+    n0re = g[0, 0].real * a0re - g[0, 0].imag * a0im \
+        + g[0, 1].real * a1re - g[0, 1].imag * a1im
+    n0im = g[0, 0].real * a0im + g[0, 0].imag * a0re \
+        + g[0, 1].real * a1im + g[0, 1].imag * a1re
+    n1re = g[1, 0].real * a0re - g[1, 0].imag * a0im \
+        + g[1, 1].real * a1re - g[1, 1].imag * a1im
+    n1im = g[1, 0].real * a0im + g[1, 0].imag * a0re \
+        + g[1, 1].real * a1im + g[1, 1].imag * a1re
+    new = jnp.stack([jnp.stack([n0re, n0im], -1),
+                     jnp.stack([n1re, n1im], -1)], 1).reshape(n, 2)
+    if control is not None:
+        cmask = ((jnp.arange(n) >> control) & 1)[:, None]
+        new = jnp.where(cmask == 1, new, state_ri)
+    return new
+
+
+def run_autovec_interleaved(state_ri, circuit: List[Gate]):
+    for g in circuit:
+        state_ri = apply_gate_interleaved(state_ri, g.matrix, g.qubit,
+                                          g.control)
+    return state_ri
+
+
+def apply_gate_planar_jnp(re, im, mat: np.ndarray, qubit: int,
+                          control: int | None = None):
+    n = re.shape[0]
+    stride = 1 << qubit
+    g = np.asarray(mat)
+    r3 = re.reshape(n // (2 * stride), 2, stride)
+    i3 = im.reshape(n // (2 * stride), 2, stride)
+    a0r, a1r = r3[:, 0], r3[:, 1]
+    a0i, a1i = i3[:, 0], i3[:, 1]
+    n0r = g[0, 0].real * a0r - g[0, 0].imag * a0i \
+        + g[0, 1].real * a1r - g[0, 1].imag * a1i
+    n0i = g[0, 0].real * a0i + g[0, 0].imag * a0r \
+        + g[0, 1].real * a1i + g[0, 1].imag * a1r
+    n1r = g[1, 0].real * a0r - g[1, 0].imag * a0i \
+        + g[1, 1].real * a1r - g[1, 1].imag * a1i
+    n1i = g[1, 0].real * a0i + g[1, 0].imag * a0r \
+        + g[1, 1].real * a1i + g[1, 1].imag * a1r
+    new_re = jnp.stack([n0r, n1r], 1).reshape(n)
+    new_im = jnp.stack([n0i, n1i], 1).reshape(n)
+    if control is not None:
+        cmask = (jnp.arange(n) >> control) & 1
+        new_re = jnp.where(cmask == 1, new_re, re)
+        new_im = jnp.where(cmask == 1, new_im, im)
+    return new_re, new_im
+
+
+def run_autovec_planar(re, im, circuit: List[Gate]):
+    for g in circuit:
+        re, im = apply_gate_planar_jnp(re, im, g.matrix, g.qubit, g.control)
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# nonvec — fori_loop over pair groups (scalar-issue analogue)
+# ---------------------------------------------------------------------------
+def run_nonvec_planar(re, im, circuit: List[Gate]):
+    n = re.shape[0]
+    for g in circuit:
+        stride = 1 << g.qubit
+        groups = n // (2 * stride)
+        gm = np.asarray(g.matrix)
+        control = g.control
+
+        def body(k, carry):
+            re, im = carry
+            base = (k // stride) * 2 * stride + (k % stride)
+            i0, i1 = base, base + stride
+            a0r, a0i = re[i0], im[i0]
+            a1r, a1i = re[i1], im[i1]
+            n0r = gm[0, 0].real * a0r - gm[0, 0].imag * a0i \
+                + gm[0, 1].real * a1r - gm[0, 1].imag * a1i
+            n0i = gm[0, 0].real * a0i + gm[0, 0].imag * a0r \
+                + gm[0, 1].real * a1i + gm[0, 1].imag * a1r
+            n1r = gm[1, 0].real * a0r - gm[1, 0].imag * a0i \
+                + gm[1, 1].real * a1r - gm[1, 1].imag * a1i
+            n1i = gm[1, 0].real * a0i + gm[1, 0].imag * a0r \
+                + gm[1, 1].real * a1i + gm[1, 1].imag * a1r
+            if control is not None:
+                on = ((i0 >> control) & 1) == 1
+                n0r = jnp.where(on, n0r, a0r)
+                n0i = jnp.where(on, n0i, a0i)
+                on1 = ((i1 >> control) & 1) == 1
+                n1r = jnp.where(on1, n1r, a1r)
+                n1i = jnp.where(on1, n1i, a1i)
+            re = re.at[i0].set(n0r).at[i1].set(n1r)
+            im = im.at[i0].set(n0i).at[i1].set(n1i)
+            return re, im
+
+        re, im = jax.lax.fori_loop(0, groups * stride, body, (re, im))
+    return re, im
+
+
+# ---------------------------------------------------------------------------
+# kernel — Pallas planar gate application
+# ---------------------------------------------------------------------------
+def run_kernel_planar(re, im, circuit: List[Gate]):
+    from repro.kernels.qsim_gate import ops as qg
+    for g in circuit:
+        if g.control is None:
+            re, im = qg.apply_gate_planar(re, im, jnp.asarray(g.matrix),
+                                          g.qubit)
+        else:
+            # controlled gates keep the jnp path (cheap select; the hot
+            # spot Qsim optimizes is the dense 1q sweep)
+            re, im = apply_gate_planar_jnp(re, im, g.matrix, g.qubit,
+                                           g.control)
+    return re, im

@@ -1,0 +1,5 @@
+from repro.serve.engine import (  # noqa: F401
+    ServeEngine,
+    make_prefill_step,
+    make_serve_step,
+)

@@ -1,0 +1,71 @@
+"""Serving engine: prefill + decode steps and a simple continuous-batching
+loop.  ``make_prefill_step`` / ``make_serve_step`` return pjit-ready pure
+functions used both by the examples and the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+
+
+def make_prefill_step(model: LM) -> Callable:
+    def prefill_step(params, cache, tokens, positions, extra):
+        logits, cache, _ = model.forward(
+            params, tokens, positions, mode="prefill", cache=cache,
+            extra=extra)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return prefill_step
+
+
+def make_serve_step(model: LM, *, sample_temperature: float = 0.0) -> Callable:
+    """One decode step: append token, return next token + updated cache."""
+
+    def serve_step(params, cache, tokens, positions, extra=None):
+        logits, cache, _ = model.forward(
+            params, tokens, positions, mode="decode", cache=cache,
+            extra=extra)
+        last = logits[:, -1]
+        if sample_temperature > 0:
+            # deterministic gumbel sampling keyed on position for repro
+            key = jax.random.fold_in(jax.random.key(0), positions[0, -1])
+            next_tok = jax.random.categorical(
+                key, last / sample_temperature, axis=-1)
+        else:
+            next_tok = jnp.argmax(last, axis=-1)
+        return next_tok.astype(jnp.int32), cache
+
+    return serve_step
+
+
+class ServeEngine:
+    """Minimal batched serving loop (greedy) used by examples/tests."""
+
+    def __init__(self, model: LM, params, max_len: int, batch: int):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.batch = batch
+        self.prefill_fn = jax.jit(make_prefill_step(model))
+        self.decode_fn = jax.jit(make_serve_step(model))
+
+    def generate(self, prompt_tokens, n_steps: int, extra=None):
+        B, S = prompt_tokens.shape
+        assert B == self.batch
+        cache = self.model.init_cache(B, self.max_len)
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        nxt, cache = self.prefill_fn(self.params, cache, prompt_tokens,
+                                     positions, extra)
+        out = [nxt]
+        for t in range(n_steps - 1):
+            pos = jnp.full((B, 1), S + t, jnp.int32)
+            nxt, cache = self.decode_fn(self.params, cache, nxt[:, None],
+                                        pos, extra)
+            out.append(nxt)
+        return jnp.stack(out, axis=1)                      # (B, n_steps)

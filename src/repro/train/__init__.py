@@ -1,0 +1,7 @@
+from repro.train.step import (  # noqa: F401
+    batch_specs,
+    init_train_state,
+    make_loss_fn,
+    make_train_step,
+    train_state_specs,
+)

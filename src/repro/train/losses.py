@@ -1,0 +1,91 @@
+"""Losses: masked cross-entropy over a padded vocab, plus a fused
+(logit-free) cross-entropy that never materializes the (B, S, V) logits
+tensor — a beyond-paper memory-term optimization used in §Perf.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.axes import constrain
+
+
+def cross_entropy(
+    logits: jax.Array,        # (B, S, V_pad) fp32
+    labels: jax.Array,        # (B, S) int32
+    vocab_size: int,          # true (unpadded) vocab
+    mask: Optional[jax.Array] = None,   # (B, S) 1.0 = count
+    z_loss: float = 0.0,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    V_pad = logits.shape[-1]
+    if V_pad > vocab_size:
+        pad_mask = jnp.arange(V_pad) >= vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    lse = jax.nn.logsumexp(logits, axis=-1)                     # (B,S)
+    # one-hot contraction instead of take_along_axis: stays local under a
+    # vocab-sharded logits layout (a gather would all-gather (B,S,V) fp32)
+    onehot = (jnp.arange(V_pad)[None, None, :] == labels[..., None])
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - gold
+    if z_loss > 0:
+        nll = nll + z_loss * jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((jnp.argmax(logits, -1) == labels) * mask).sum() / denom
+    return loss, {"nll": loss, "accuracy": acc}
+
+
+def fused_cross_entropy(
+    x: jax.Array,             # (B, S, d) final hidden states
+    emb_table: jax.Array,     # (V_pad, d)
+    labels: jax.Array,
+    vocab_size: int,
+    mask: Optional[jax.Array] = None,
+    vocab_chunk: int = 8192,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Cross-entropy computed by scanning over vocab chunks with an online
+    logsumexp: peak memory O(B*S*vocab_chunk) instead of O(B*S*V).
+
+    The gold logit is an embedding gather; lse is accumulated chunkwise.
+    """
+    B, S, d = x.shape
+    V_pad = emb_table.shape[0]
+    n_chunks = -(-V_pad // vocab_chunk)
+    pad = n_chunks * vocab_chunk - V_pad
+    table = emb_table
+    if pad:
+        table = jnp.pad(table, ((0, pad), (0, 0)))
+    chunks = table.reshape(n_chunks, vocab_chunk, d)
+
+    xf = x.astype(jnp.float32)
+
+    def body(carry, inp):
+        m, l = carry
+        c_idx, tbl = inp
+        logit = jnp.einsum("bsd,vd->bsv", xf, tbl.astype(jnp.float32))
+        vocab_pos = c_idx * vocab_chunk + jnp.arange(vocab_chunk)
+        logit = jnp.where((vocab_pos < vocab_size)[None, None, :],
+                          logit, -1e30)
+        m_new = jnp.maximum(m, jnp.max(logit, axis=-1))
+        l_new = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logit - m_new[..., None]), axis=-1)
+        return (m_new, l_new), None
+
+    m0 = jnp.full((B, S), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, S), jnp.float32)
+    (m, l), _ = jax.lax.scan(body, (m0, l0),
+                             (jnp.arange(n_chunks), chunks))
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    gold_emb = emb_table[labels]                               # (B,S,d)
+    gold = jnp.einsum("bsd,bsd->bs", xf, gold_emb.astype(jnp.float32))
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    return loss, {"nll": loss}

@@ -1,0 +1,162 @@
+"""Train-step builder: loss → grad → (optional microbatch accumulation,
+optional int8-EF gradient compression) → AdamW update.
+
+The returned ``train_step(state, batch)`` is pjit-ready: all inputs/outputs
+carry logical sharding specs resolvable against any mesh (see
+repro.parallel).  ``state`` is a plain dict pytree:
+  {"params", "opt": {m, v, count}, "step", ["grad_err"]}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.optim import AdamWConfig, adamw_update, init_opt_state, opt_state_specs
+from repro.optim import compression as comp
+from repro.train import losses
+
+
+def make_loss_fn(model: LM, *, z_loss: float = 0.0, fused_xent: bool = False):
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        extra = {k: batch[k] for k in ("image_embeds", "audio_frames")
+                 if k in batch}
+        if fused_xent:
+            # run the backbone without the unembedding matmul
+            logits, _, aux = None, None, None
+            x, aux = _backbone_hidden(model, params, batch, extra)
+            emb = params["embed"] if cfg.tie_embeddings else params["unembed"]
+            loss, metrics = losses.fused_cross_entropy(
+                x, emb["table"], batch["labels"], cfg.vocab_size,
+                mask=batch.get("loss_mask"))
+        else:
+            logits, _, aux = model.forward(
+                params, batch["tokens"], batch["positions"], mode="train",
+                extra=extra)
+            loss, metrics = losses.cross_entropy(
+                logits, batch["labels"], cfg.vocab_size,
+                mask=batch.get("loss_mask"), z_loss=z_loss)
+        if cfg.moe is not None:
+            loss = loss + cfg.moe.aux_loss_weight * aux
+            metrics["moe_aux"] = aux
+        metrics["loss"] = loss
+        return loss, metrics
+
+    return loss_fn
+
+
+def _backbone_hidden(model: LM, params, batch, extra):
+    """Forward pass that stops at the final hidden states (for fused xent)."""
+    from repro.models import layers as L
+    from repro.models import blocks
+    cfg = model.cfg
+    x = L.embed(batch["tokens"], params["embed"],
+                L.dtype_of(cfg.compute_dtype))
+    ctx = None
+    if cfg.family == "vlm":
+        ctx = extra["image_embeds"].astype(x.dtype)
+    if cfg.family == "audio":
+        raise NotImplementedError("fused xent for enc-dec not wired")
+    step = functools.partial(model._period_step, mode="train",
+                             positions=batch["positions"], ctx=ctx)
+    x, _, aux = blocks.run_stack(x, params["stack"], step,
+                                 n_steps=model.n_periods, remat=cfg.remat)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def init_train_state(model: LM, key, opt_cfg: AdamWConfig,
+                     grad_compression: Optional[str] = None) -> Dict[str, Any]:
+    params = model.init_params(key)
+    state = {
+        "params": params,
+        "opt": init_opt_state(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if grad_compression == "int8_ef":
+        state["grad_err"] = comp.init_error_state(params)
+    return state
+
+
+def train_state_specs(model: LM, grad_compression: Optional[str] = None):
+    pspecs = model.param_specs()
+    specs = {
+        "params": pspecs,
+        "opt": opt_state_specs(pspecs),
+        "step": (),
+    }
+    if grad_compression == "int8_ef":
+        specs["grad_err"] = pspecs
+    return specs
+
+
+def batch_specs(cfg, kind: str = "train"):
+    s = {
+        "tokens": ("batch", None),
+        "positions": ("batch", None),
+    }
+    if kind == "train":
+        s["labels"] = ("batch", None)
+        s["loss_mask"] = ("batch", None)
+    if cfg.family == "vlm":
+        s["image_embeds"] = ("batch", "image_tokens", None)
+    if cfg.family == "audio":
+        s["audio_frames"] = ("batch", "audio_ctx", None)
+    return s
+
+
+def make_train_step(
+    model: LM,
+    opt_cfg: AdamWConfig,
+    *,
+    microbatches: int = 1,
+    grad_compression: Optional[str] = None,
+    z_loss: float = 0.0,
+    fused_xent: bool = False,
+) -> Callable:
+    loss_fn = make_loss_fn(model, z_loss=z_loss, fused_xent=fused_xent)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb_i):
+                g_acc, loss_acc = carry
+                (loss, metrics), g = grad_fn(params, mb_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, loss_acc + loss), metrics
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_body, (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+            metrics["loss"] = loss_sum / microbatches
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        new_state = dict(state)
+        if grad_compression == "int8_ef":
+            grads, new_err = comp.ef_compress_tree(grads, state["grad_err"])
+            new_state["grad_err"] = new_err
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state["opt"], params, opt_cfg)
+        metrics.update(opt_metrics)
+        new_state.update(
+            params=new_params, opt=new_opt, step=state["step"] + 1)
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,33 @@
+"""Deliverable-(e) regression: one full dry-run cell (lower + compile on
+the 256-chip production mesh with 512 fake host devices) must succeed and
+produce a well-formed record.  Runs in a subprocess so the main test
+process keeps its single-device view.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import tempfile
+
+
+def test_dryrun_cell_compiles(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "whisper-base", "--shape", "decode_32k",
+         "--out-dir", str(tmp_path), "--force"],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    rec = json.loads(
+        (tmp_path /
+         "whisper-base__decode_32k__pod16x16__baseline.json").read_text())
+    assert rec["runnable"] and "error" not in rec
+    assert rec["n_chips"] == 256
+    assert rec["roofline"]["bound"] in ("compute", "memory", "collective")
+    assert rec["memory"]["state_bytes_per_device"] > 0
+    assert rec["collectives"]["count"] >= 0
+    assert rec["analytic"]["step_flops_global"] > 0

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import autotune, costmodel
+from repro.core.hlo import shape_bytes
+from repro.models import layers, moe as moe_lib
+from repro.models.attention import chunked_attention
+from repro.optim import compression as comp
+
+SET = settings(max_examples=20, deadline=None)
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@SET
+def test_rope_preserves_norm(seq, heads):
+    x = jax.random.normal(jax.random.key(seq * 8 + heads),
+                          (1, seq, heads, 32), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(seq)[None], (1, seq))
+    y = layers.apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+@given(st.integers(2, 6), st.integers(1, 2), st.integers(0, 1000))
+@SET
+def test_router_mass_conservation(n_experts, top_k, seed):
+    top_k = min(top_k, n_experts)
+    x = jax.random.normal(jax.random.key(seed), (2, 8, 16), jnp.float32)
+    router = jax.random.normal(jax.random.key(seed + 1), (16, n_experts),
+                               jnp.float32)
+    gates, ids, probs = moe_lib.route(x, router, top_k)
+    np.testing.assert_allclose(np.asarray(gates.sum(-1)), 1.0, rtol=1e-5)
+    assert (np.asarray(ids) < n_experts).all()
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, rtol=1e-5)
+
+
+@given(st.integers(16, 128), st.integers(0, 50))
+@SET
+def test_flash_equals_naive_softmax(skv, seed):
+    q = jax.random.normal(jax.random.key(seed), (1, 8, 2, 16), jnp.float32)
+    k = jax.random.normal(jax.random.key(seed + 1), (1, skv, 2, 16),
+                          jnp.float32)
+    v = jax.random.normal(jax.random.key(seed + 2), (1, skv, 2, 16),
+                          jnp.float32)
+    got = chunked_attention(q, k, v, causal=False, kv_chunk=32)
+    s = jnp.einsum("bqnh,bknh->bnqk", q, k) * (16 ** -0.5)
+    p = jax.nn.softmax(s, -1)
+    want = jnp.einsum("bnqk,bknh->bqnh", p, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.floats(0.1, 100.0), st.integers(1, 512))
+@SET
+def test_compression_error_bounded(scale_mag, n):
+    g = {"w": jnp.asarray(
+        np.random.default_rng(n).standard_normal(n) * scale_mag,
+        jnp.float32)}
+    deq, err = comp.ef_compress_tree(g, comp.init_error_state(g))
+    step = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(np.asarray(err["w"])))) <= step + 1e-6
+
+
+@given(st.sampled_from([1, 2, 4, 8]), st.integers(256, 8192))
+@SET
+def test_autotune_monotone_working_set(m, size):
+    size = (size // 128) * 128 or 128
+    ks = autotune.gemm_shape(size, size, size, bk=min(512, size))
+    r1 = autotune.predict(ks, 1)
+    rm = autotune.predict(ks, m)
+    assert rm.working_set >= r1.working_set
+    if not rm.fits_vmem:
+        assert rm.bound == "vmem-spill"
+
+
+@given(st.integers(1, 4), st.integers(128, 4096))
+@SET
+def test_costmodel_flops_monotone_in_batch(batch, seq):
+    from repro.configs import get_config
+    from repro.configs.shapes import ShapeSpec
+    cfg = get_config("granite-3-2b")
+    s1 = ShapeSpec("a", seq, batch, "train")
+    s2 = ShapeSpec("b", seq, batch * 2, "train")
+    f1 = costmodel.step_flops(cfg, s1)["total"]
+    f2 = costmodel.step_flops(cfg, s2)["total"]
+    assert abs(f2 / f1 - 2.0) < 0.01
+
+
+@given(st.sampled_from(["pred", "s8", "bf16", "f32", "f64"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=3))
+@SET
+def test_shape_bytes_parses(dtype, dims):
+    n = int(np.prod(dims)) if dims else 1
+    per = {"pred": 1, "s8": 1, "bf16": 2, "f32": 4, "f64": 8}[dtype]
+    s = f"{dtype}[{','.join(map(str, dims))}]"
+    assert shape_bytes(s) == n * per
+
+
+@given(st.integers(0, 9), st.integers(0, 99))
+@SET
+def test_qsim_gate_unitary(qubit, seed):
+    from repro.quantum import qsim
+    from repro.quantum.gates import H
+    n = 10
+    key = jax.random.key(seed)
+    re = jax.random.normal(key, (2 ** n,), jnp.float32)
+    im = jax.random.normal(jax.random.fold_in(key, 1), (2 ** n,),
+                           jnp.float32)
+    norm = jnp.sqrt(jnp.sum(re * re + im * im))
+    re, im = re / norm, im / norm
+    gr, gi = qsim.apply_gate_planar_jnp(re, im, H, qubit)
+    np.testing.assert_allclose(
+        float(jnp.sum(gr * gr + gi * gi)), 1.0, rtol=1e-5)

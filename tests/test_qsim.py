@@ -1,0 +1,91 @@
+"""Qsim study tests: all version x layout combinations agree, unitarity
+holds, and the distributed simulator (subprocess with 8 fake devices)
+matches the single-device result gate-for-gate.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.quantum import gates, qsim
+
+
+def _final_complex(n=8, depth=4, seed=3):
+    circuit = gates.random_circuit(n, depth, seed)
+    state = qsim.init_state(n)
+    return qsim.run_autovec_complex(state, circuit), circuit
+
+
+def test_layouts_and_versions_agree():
+    n = 8
+    want, circuit = _final_complex(n)
+    w = np.asarray(want)
+
+    # interleaved
+    ri = jnp.zeros((2 ** n, 2), jnp.float32).at[0, 0].set(1.0)
+    got = np.asarray(qsim.run_autovec_interleaved(ri, circuit))
+    np.testing.assert_allclose(got[:, 0], w.real, atol=1e-5)
+    np.testing.assert_allclose(got[:, 1], w.imag, atol=1e-5)
+
+    # planar autovec
+    re = jnp.zeros((2 ** n,), jnp.float32).at[0].set(1.0)
+    im = jnp.zeros((2 ** n,), jnp.float32)
+    gr, gi = qsim.run_autovec_planar(re, im, circuit)
+    np.testing.assert_allclose(np.asarray(gr), w.real, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(gi), w.imag, atol=1e-5)
+
+    # planar kernel
+    kr, ki = qsim.run_kernel_planar(re, im, circuit)
+    np.testing.assert_allclose(np.asarray(kr), w.real, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ki), w.imag, atol=1e-5)
+
+    # nonvec (smaller circuit for loop speed)
+    small = circuit[: 2 * n]
+    nr, ni = qsim.run_nonvec_planar(re, im, small)
+    sr, si = qsim.run_autovec_planar(re, im, small)
+    np.testing.assert_allclose(np.asarray(nr), np.asarray(sr), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ni), np.asarray(si), atol=1e-5)
+
+
+def test_unitarity():
+    want, _ = _final_complex(n=9, depth=6, seed=11)
+    np.testing.assert_allclose(float(jnp.linalg.norm(want)), 1.0, rtol=1e-5)
+
+
+_DIST_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.quantum import gates, qsim
+from repro.quantum.distributed import run_distributed
+
+n, depth = 9, 4
+circuit = gates.random_circuit(n, depth, seed=5)
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+re = jnp.zeros((2 ** n,), jnp.float32).at[0].set(1.0)
+im = jnp.zeros((2 ** n,), jnp.float32)
+sh = NamedSharding(mesh, P("data"))
+re_d, im_d = jax.device_put(re, sh), jax.device_put(im, sh)
+gr, gi = run_distributed(re_d, im_d, circuit, mesh)
+want = qsim.run_autovec_complex(qsim.init_state(n), circuit)
+w = np.asarray(want)
+np.testing.assert_allclose(np.asarray(gr), w.real, atol=1e-5)
+np.testing.assert_allclose(np.asarray(gi), w.imag, atol=1e-5)
+print("DIST_OK")
+"""
+
+
+def test_distributed_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _DIST_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "DIST_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,136 @@
+"""Substrate tests: data determinism, checkpoint round-trip + retention,
+elastic reshard, trainer fault tolerance (kill/resume == uninterrupted),
+optimizer behavior, gradient compression.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, restore_resharded
+from repro.configs import reduced_config
+from repro.data import DataConfig, SyntheticLMStream
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.optim import compression as comp
+from repro.train import init_train_state, make_train_step
+from repro.train.trainer import SimulatedFailure, Trainer, TrainerConfig
+
+
+def test_data_determinism():
+    cfg = reduced_config("qwen3-1.7b")
+    s1 = SyntheticLMStream(cfg, 4, 32)
+    s2 = SyntheticLMStream(cfg, 4, 32)
+    b1, b2 = s1.batch_for_step(7), s2.batch_for_step(7)
+    for k in b1:
+        np.testing.assert_array_equal(np.asarray(b1[k]), np.asarray(b2[k]))
+    b3 = s1.batch_for_step(8)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_checkpoint_roundtrip_and_retention(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep_last=2)
+    state = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 3))},
+             "step": jnp.zeros((), jnp.int32)}
+    for s in (1, 2, 3):
+        ck.save(s, state)
+    assert ck.all_steps() == [2, 3]
+    restored, manifest = ck.restore(3, like=state)
+    assert manifest["step"] == 3
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+        np.asarray(x), np.asarray(y)), state, restored)
+
+
+def test_checkpoint_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    state = {"w": jnp.ones((64, 64))}
+    ck.save(5, state)
+    ck.wait()
+    restored, _ = ck.restore(5, like=state)
+    np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                  np.asarray(state["w"]))
+
+
+def test_elastic_reshard(tmp_path):
+    from repro.launch.mesh import make_host_mesh
+    ck = Checkpointer(str(tmp_path))
+    state = {"w": jnp.arange(64.0).reshape(8, 8)}
+    ck.save(1, state)
+    mesh = make_host_mesh()  # 1 device on CPU; exercises the API path
+    out, _ = restore_resharded(ck, 1, state, {"w": ("batch", "mlp")}, mesh)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(state["w"]))
+
+
+def _make_trainer(tmp_path, total=6, fail_at=None, arch="qwen3-1.7b"):
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3)
+    stream = SyntheticLMStream(cfg, 2, 16)
+    step = jax.jit(make_train_step(model, opt))
+    return Trainer(
+        step,
+        lambda: init_train_state(model, jax.random.key(0), opt),
+        stream, str(tmp_path / "ckpt"),
+        TrainerConfig(total_steps=total, checkpoint_every=2,
+                      fail_at_step=fail_at, log_every=100),
+    )
+
+
+def test_trainer_kill_resume_equals_uninterrupted(tmp_path):
+    # uninterrupted run
+    t_full = _make_trainer(tmp_path / "a", total=6)
+    out_full = t_full.run()
+
+    # killed at step 5 (after ckpt@4), then resumed
+    t_fail = _make_trainer(tmp_path / "b", total=6, fail_at=5)
+    with pytest.raises(SimulatedFailure):
+        t_fail.run()
+    t_resume = _make_trainer(tmp_path / "b", total=6)
+    out_resume = t_resume.run()
+
+    jax.tree.map(
+        lambda x, y: np.testing.assert_allclose(
+            np.asarray(x, np.float32), np.asarray(y, np.float32),
+            rtol=1e-5, atol=1e-6),
+        out_full["state"]["params"], out_resume["state"]["params"])
+
+
+def test_loss_decreases(tmp_path):
+    t = _make_trainer(tmp_path, total=12, arch="granite-3-2b")
+    out = t.run()
+    first = np.mean([r["loss"] for r in out["log"][:3]])
+    last = np.mean([r["loss"] for r in out["log"][-3:]])
+    assert last < first, (first, last)
+
+
+def test_adamw_moves_params_and_clips():
+    params = {"w": jnp.ones((4, 4))}
+    grads = {"w": jnp.full((4, 4), 100.0)}   # huge -> must clip
+    opt = init_opt_state(params)
+    cfg = AdamWConfig(lr=0.1, grad_clip_norm=1.0)
+    new_p, new_s, metrics = adamw_update(grads, opt, params, cfg)
+    assert metrics["grad_norm"] > 1.0
+    assert np.all(np.asarray(new_p["w"]) < 1.0)
+    assert int(new_s["count"]) == 1
+
+
+def test_grad_compression_error_feedback():
+    g = {"w": jnp.asarray(np.random.default_rng(0).standard_normal((128,)),
+                          jnp.float32)}
+    err = comp.init_error_state(g)
+    deq, err1 = comp.ef_compress_tree(g, err)
+    # single-step quantization error is bounded by the int8 step size
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(err1["w"]))) <= scale
+    # error feedback: accumulated error re-injected -> long-run mean exact
+    total_dq = jnp.zeros_like(g["w"])
+    err_t = comp.init_error_state(g)
+    for _ in range(64):
+        dq, err_t = comp.ef_compress_tree(g, err_t)
+        total_dq = total_dq + dq["w"]
+    np.testing.assert_allclose(np.asarray(total_dq) / 64,
+                               np.asarray(g["w"]), atol=2 * scale / 64)
