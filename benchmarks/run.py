@@ -23,6 +23,7 @@ from benchmarks import (
     fig8_pressure,
     fig9_qsim,
     roofline_table,
+    serve_bench,
     table1_counters,
 )
 
@@ -37,6 +38,7 @@ BENCHMARKS = [
     ("fig8_pressure", fig8_pressure),
     ("fig9_qsim", fig9_qsim),
     ("roofline", roofline_table),
+    ("serve_bench", serve_bench),
 ]
 
 

@@ -52,10 +52,11 @@ def main():
 
     if args.distributed:
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import AxisType, make_mesh
         from repro.quantum.distributed import run_distributed
         ndev = len(jax.devices())
-        mesh = jax.make_mesh((ndev,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_mesh((ndev,), ("data",),
+                         axis_types=(AxisType.Auto,))
         sh = NamedSharding(mesh, P("data"))
         rd, idd = jax.device_put(re, sh), jax.device_put(im, sh)
         gr, gi = run_distributed(rd, idd, circuit, mesh)

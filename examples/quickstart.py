@@ -37,18 +37,26 @@ def main():
         print(f"step {i}: loss={float(metrics['loss']):.4f} "
               f"grad_norm={float(metrics['grad_norm']):.3f}")
 
-    # prefill + a few greedy decode steps
-    from repro.serve import ServeEngine
-    engine = ServeEngine(model, state["params"], max_len=64, batch=2)
+    # prefill + a few greedy decode steps: the continuous-batching engine
+    # for attention-cache families, the static baseline otherwise
+    from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
+    from repro.serve.engine import MIXED_STEP_FAMILIES
     prompt = stream.batch_for_step(99)["tokens"][:, :16]
-    extra = None
-    if cfg.family == "vlm":
-        extra = {"image_embeds": jnp.ones(
-            (2, cfg.num_image_tokens, cfg.d_model), jnp.float32) * 0.01}
-    if cfg.family == "audio":
-        extra = {"audio_frames": jnp.ones(
-            (2, cfg.n_audio_ctx, cfg.d_model), jnp.float32) * 0.01}
-    tokens = engine.generate(prompt, n_steps=8, extra=extra)
+    if cfg.family in MIXED_STEP_FAMILIES:
+        engine = ContinuousBatchingEngine(
+            model, state["params"], n_slots=2, max_len=64, page_size=8)
+        tokens = engine.generate(prompt, n_steps=8)
+    else:
+        engine = StaticBatchEngine(model, state["params"], max_len=64,
+                                   batch=2)
+        extra = None
+        if cfg.family == "vlm":
+            extra = {"image_embeds": jnp.ones(
+                (2, cfg.num_image_tokens, cfg.d_model), jnp.float32) * 0.01}
+        if cfg.family == "audio":
+            extra = {"audio_frames": jnp.ones(
+                (2, cfg.n_audio_ctx, cfg.d_model), jnp.float32) * 0.01}
+        tokens = engine.generate(prompt, n_steps=8, extra=extra)
     print("generated:", tokens.tolist())
 
 

@@ -1,5 +1,7 @@
-"""Batched serving example: prefill a batch of prompts, decode with the
-KV-cache engine, report per-step decode latency (host CPU).
+"""Continuous-batching serving example: more requests than slots, mixed
+prompt lengths, mixed generation lengths.  Queued requests are admitted
+into slots the moment earlier requests finish — watch the admission log
+to see a request enter a recycled slot mid-run.
 
   PYTHONPATH=src python examples/serve_decode.py --arch granite-3-2b
 """
@@ -7,47 +9,60 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, reduced_config
 from repro.models import build_model
-from repro.serve import ServeEngine
+from repro.serve import ContinuousBatchingEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b", choices=ARCH_IDS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
     model = build_model(cfg)
     params = model.init_params(jax.random.key(0))
-    engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.gen_len + 8,
-                         batch=args.batch)
+    engine = ContinuousBatchingEngine(
+        model, params, n_slots=args.slots, max_len=args.max_len,
+        page_size=args.page_size, prefill_chunk=args.prefill_chunk)
 
-    prompt = jax.random.randint(
-        jax.random.key(1), (args.batch, args.prompt_len), 1, cfg.vocab_size)
-    extra = None
-    if cfg.family == "vlm":
-        extra = {"image_embeds": jnp.ones(
-            (args.batch, cfg.num_image_tokens, cfg.d_model)) * 0.01}
-    if cfg.family == "audio":
-        extra = {"audio_frames": jnp.ones(
-            (args.batch, cfg.n_audio_ctx, cfg.d_model)) * 0.01}
+    # mixed workload: prompt lengths 5..29, generation lengths 6..16
+    rng = np.random.default_rng(0)
+    rids = []
+    for i in range(args.requests):
+        plen = int(rng.integers(5, 30))
+        glen = int(rng.integers(6, 17))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen)
+        rid = engine.submit(prompt, glen, temperature=args.temperature)
+        rids.append((rid, plen, glen))
+        print(f"submit rid={rid} prompt_len={plen} gen_len={glen}")
 
     t0 = time.perf_counter()
-    out = engine.generate(prompt, n_steps=args.gen_len, extra=extra)
-    jax.block_until_ready(out)
-    dt = time.perf_counter() - t0
-    print(f"arch={args.arch} batch={args.batch} "
-          f"prefill {args.prompt_len} + decode {args.gen_len}")
-    print(f"wall={dt:.2f}s  ({args.gen_len * args.batch / dt:.1f} tok/s "
-          f"aggregate, incl. first-call compile)")
-    print("sample:", out[0, :16].tolist())
+    results = engine.run()
+    wall = time.perf_counter() - t0
+
+    for req in engine.requests():
+        print(f"rid={req.rid} slot-admitted@step {req.admit_step:3d} "
+              f"first-token@{req.first_token_step:3d} "
+              f"finished@{req.finish_step:3d} ({req.finish_reason}) "
+              f"tokens={results[req.rid][:8].tolist()}...")
+
+    late = [r for r in engine.requests() if r.admit_step > 0]
+    if late:
+        print(f"\n{len(late)} request(s) admitted into recycled slots "
+              f"mid-run (steps {[r.admit_step for r in late]})")
+    s = engine.stats.summary()
+    print(f"\nwall={wall:.2f}s  {s['tok_per_s']:.1f} tok/s generated  "
+          f"steps={s['steps']}  p50={s['step_ms_p50']:.1f}ms "
+          f"p95={s['step_ms_p95']:.1f}ms  occupancy={s['mean_occupancy']:.2f}")
 
 
 if __name__ == "__main__":

@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import hlo as hlo_lib
+from repro.core.compat import cost_dict
 
 
 @dataclasses.dataclass
@@ -60,7 +61,7 @@ def _compiled(fn, *args):
 
 
 def _cost(fn, *args) -> Dict:
-    return _compiled(fn, *args).cost_analysis() or {}
+    return cost_dict(_compiled(fn, *args))
 
 
 def calibrate(n: int = 1 << 16, steps: int = 8) -> List[CounterRecord]:

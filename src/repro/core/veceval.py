@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hlo as hlo_lib
+from repro.core import compat, hlo as hlo_lib
 from repro.core.costmodel import TPU_V5E
 
 
@@ -252,7 +252,7 @@ def evaluate_app(app: ProxyApp, measure: bool = True,
     base_ops = None
     for v in app.versions:
         compiled = jax.jit(v.fn).lower(*v.args).compile()
-        cost = compiled.cost_analysis() or {}
+        cost = compat.cost_dict(compiled)
         rep = hlo_lib.analyze_hlo(compiled.as_text())
         total_ops = sum(rep.op_histogram.values())
         if v.name == "scalar":

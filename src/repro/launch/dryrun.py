@@ -27,7 +27,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import (  # noqa: E402
     ARCH_IDS, SHAPES, SHAPES_BY_NAME, get_config, shape_applicable)
-from repro.core import costmodel, hlo as hlo_lib  # noqa: E402
+from repro.core import compat, costmodel, hlo as hlo_lib  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.optim import AdamWConfig  # noqa: E402
@@ -241,7 +241,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         return rec
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_dict(compiled)
     report = hlo_lib.analyze_hlo(compiled.as_text(), total_devices=n_chips)
 
     opts = costmodel.ImplOpts(

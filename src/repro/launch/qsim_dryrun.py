@@ -25,7 +25,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.core import costmodel, hlo as hlo_lib  # noqa: E402
 from repro.launch.dryrun import RESULTS_DIR  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.mesh import (  # noqa: E402
+    AxisType, make_mesh, make_production_mesh)
 from repro.quantum import gates  # noqa: E402
 from repro.quantum.distributed import run_distributed  # noqa: E402
 
@@ -41,9 +42,9 @@ def main():
     n_chips = mesh.devices.size
     # flatten (pod, data, model) -> one amplitude axis: reuse "data" only
     # would leave model idle, so build a flat mesh over the same devices.
-    flat = jax.make_mesh((n_chips,), ("amps",),
-                         axis_types=(jax.sharding.AxisType.Auto,),
-                         devices=mesh.devices.reshape(-1))
+    flat = make_mesh((n_chips,), ("amps",),
+                     axis_types=(AxisType.Auto,),
+                     devices=mesh.devices.reshape(-1))
 
     n = args.qubits
     circuit = gates.random_circuit(n, args.depth, seed=0)

@@ -1,7 +1,11 @@
-"""Serving launcher: batched prefill+decode with the KV-cache engine.
+"""Serving launcher: continuous batching with the paged-KV engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
-      --reduced --batch 4 --prompt-len 32 --gen-len 32 [--int8]
+      --reduced --slots 4 --requests 8 --prompt-len 32 --gen-len 32 [--int8]
+
+Attention-cache families (dense / moe) run the continuous-batching
+engine; recurrent/cross-state families (ssm / hybrid / vlm / audio) fall
+back to the fixed-batch StaticBatchEngine.
 """
 from __future__ import annotations
 
@@ -10,20 +14,27 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.models import build_model
 from repro.models.quant import quantize_params
-from repro.serve import ServeEngine
+from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
+from repro.serve.engine import MIXED_STEP_FAMILIES
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b", choices=ARCH_IDS)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", "--batch", dest="slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=0,
+                    help="queued requests (default: 2x slots)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--prefill-chunk", type=int, default=8)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--int8", action="store_true",
                     help="weight-only int8 serving")
     args = ap.parse_args()
@@ -36,25 +47,57 @@ def main():
         params = quantize_params(params)
         print("[serve] int8 weight-only quantization enabled")
 
-    engine = ServeEngine(model, params,
-                         max_len=args.prompt_len + args.gen_len + 8,
-                         batch=args.batch)
+    n_req = args.requests or 2 * args.slots
+    max_len = args.prompt_len + args.gen_len + 8
+    rng = np.random.default_rng(1)
+
+    if cfg.family in MIXED_STEP_FAMILIES:
+        page = args.page_size
+        max_len = -(-max_len // page) * page              # round up to pages
+        engine = ContinuousBatchingEngine(
+            model, params, n_slots=args.slots, max_len=max_len,
+            page_size=page, prefill_chunk=args.prefill_chunk)
+        for _ in range(n_req):
+            plen = int(rng.integers(max(1, args.prompt_len // 2),
+                                    args.prompt_len + 1))
+            prompt = rng.integers(1, cfg.vocab_size, size=plen)
+            engine.submit(prompt, args.gen_len,
+                          temperature=args.temperature)
+        t0 = time.perf_counter()
+        engine.run()
+        dt = time.perf_counter() - t0
+        s = engine.stats.summary()
+        print(f"[serve] {args.arch} slots={args.slots} requests={n_req}: "
+              f"{s['generated_tokens'] / dt:.1f} tok/s aggregate "
+              f"(incl. compile); steps={s['steps']} "
+              f"p50={s['step_ms_p50']:.1f}ms "
+              f"occupancy={s['mean_occupancy']:.2f}")
+        first = engine.requests()[0]
+        print(f"[serve] sample rid={first.rid}: "
+              f"{first.generated[:12]}")
+        return
+
+    # recurrent / cross-state families: fixed-batch baseline
+    print(f"[serve] family {cfg.family!r}: StaticBatchEngine fallback")
+    engine = StaticBatchEngine(model, params, max_len=max_len,
+                               batch=args.slots,
+                               sample_temperature=args.temperature)
     prompt = jax.random.randint(jax.random.key(1),
-                                (args.batch, args.prompt_len), 1,
+                                (args.slots, args.prompt_len), 1,
                                 cfg.vocab_size)
     extra = None
     if cfg.family == "vlm":
         extra = {"image_embeds": jnp.ones(
-            (args.batch, cfg.num_image_tokens, cfg.d_model)) * 0.01}
+            (args.slots, cfg.num_image_tokens, cfg.d_model)) * 0.01}
     if cfg.family == "audio":
         extra = {"audio_frames": jnp.ones(
-            (args.batch, cfg.n_audio_ctx, cfg.d_model)) * 0.01}
+            (args.slots, cfg.n_audio_ctx, cfg.d_model)) * 0.01}
     t0 = time.perf_counter()
     out = engine.generate(prompt, n_steps=args.gen_len, extra=extra)
     jax.block_until_ready(out)
     dt = time.perf_counter() - t0
-    print(f"[serve] {args.arch} batch={args.batch}: "
-          f"{args.gen_len * args.batch / dt:.1f} tok/s aggregate "
+    print(f"[serve] {args.arch} batch={args.slots}: "
+          f"{args.gen_len * args.slots / dt:.1f} tok/s aggregate "
           f"(incl. compile); sample: {out[0, :12].tolist()}")
 
 

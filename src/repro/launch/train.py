@@ -51,8 +51,9 @@ def main():
 
     if args.mesh:
         d, m = (int(v) for v in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import AxisType, make_mesh
+        mesh = make_mesh((d, m), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
         rules = rules_for(cfg, mesh)
 
         def sharded_step(state, batch):

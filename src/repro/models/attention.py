@@ -383,8 +383,17 @@ def attn_prefill(params, x, cfg, *, positions, cache, kv_chunk=1024,
     return _out_proj(params, out, cfg), new_cache
 
 
-def attn_decode(params, x, cfg, *, positions, cache):
+def attn_decode(params, x, cfg, *, positions, cache, n_valid=None):
     """Decode: write current token K/V at cache position, attend over cache.
+
+    ``n_valid`` (B,) int32 — optional per-row count of valid tokens in the
+    (B, S) step, for the serving engine's mixed chunked-prefill + decode
+    batches: rows carry between 0 (idle slot) and S (full prefill chunk)
+    real tokens, right-padded.  Cache writes for padding columns are
+    dropped (their scatter index is forced out of bounds), the attention
+    valid-length mask closes over ``pos + n_valid``, and the cache position
+    advances by ``n_valid`` instead of S.  ``None`` keeps the classic
+    all-rows-full behavior.
 
     When the active sharding rules map the cache length ("kv_seq") to a
     mesh axis, the sequence-parallel flash-decoding path runs instead:
@@ -401,17 +410,25 @@ def attn_decode(params, x, cfg, *, positions, cache):
         k = layers.apply_rope(k, positions, cfg.rope_theta)
     kv_axes = rule_axes("kv_seq")
     if kv_axes:
+        assert n_valid is None, "n_valid unsupported on the SP-KV path"
         return _attn_decode_spkv(params, q, k, v, cfg,
                                  positions=positions, cache=cache,
                                  axis=kv_axes[0])
     q, k, v = _constrain_qkv(q, k, v)
     pos = cache["pos"]                                    # (B,)
+    S_cache = cache["k"].shape[1]
     idx = pos[:, None] + jnp.arange(S)[None]              # (B,S)
-    kc = jax.vmap(lambda c, u, i: c.at[i].set(u))(cache["k"], k.astype(cache["k"].dtype), idx)
-    vc = jax.vmap(lambda c, u, i: c.at[i].set(u))(cache["v"], v.astype(cache["v"].dtype), idx)
-    new_cache = {"k": kc, "v": vc, "pos": pos + S}
+    step = jnp.full((B,), S, jnp.int32) if n_valid is None else n_valid
+    if n_valid is not None:
+        # padding columns scatter out of bounds -> dropped
+        idx = jnp.where(jnp.arange(S)[None] < n_valid[:, None], idx, S_cache)
+    kc = jax.vmap(lambda c, u, i: c.at[i].set(u, mode="drop"))(
+        cache["k"], k.astype(cache["k"].dtype), idx)
+    vc = jax.vmap(lambda c, u, i: c.at[i].set(u, mode="drop"))(
+        cache["v"], v.astype(cache["v"].dtype), idx)
+    new_cache = {"k": kc, "v": vc, "pos": pos + step}
     out = _full_attention_with_cache(
-        q, kc, vc, positions=positions, kv_valid_len=pos + S,
+        q, kc, vc, positions=positions, kv_valid_len=pos + step,
         softcap=cfg.attn_logit_softcap)
     return _out_proj(params, out, cfg), new_cache
 
@@ -426,6 +443,7 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis):
     all-gathering the O(B*S*NKV*H) cache.
     """
     from jax.sharding import PartitionSpec as P
+    from repro.core.compat import shard_map
     from repro.parallel.axes import current_mesh, resolve_spec
 
     mesh = current_mesh()
@@ -476,11 +494,11 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis):
         out = acc_glob / jnp.maximum(l_glob, 1e-30)[..., None]
         return out.transpose(0, 2, 1, 3).astype(q.dtype), kc, vc
 
-    out, kc, vc = jax.shard_map(
+    out, kc, vc = shard_map(
         body, mesh=mesh,
         in_specs=(qs, kv_new, kv_new, cache_s, cache_s, pos_s, pos_s),
         out_specs=(qs, cache_s, cache_s),
-        check_vma=False,
+        check=False,
     )(q, k, v, cache["k"], cache["v"], cache["pos"], positions)
     new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + q.shape[1]}
     return _out_proj(params, out, cfg), new_cache

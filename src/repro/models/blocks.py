@@ -85,8 +85,10 @@ def _name_block_out(t):
 
 
 def attn_layer(p, x, cfg, *, mode, positions, cache=None, causal=True,
-               block_causal=True):
-    """One pre-norm decoder layer.  Returns (x, new_cache, aux)."""
+               block_causal=True, n_valid=None):
+    """One pre-norm decoder layer.  Returns (x, new_cache, aux).
+
+    ``n_valid`` only applies to decode mode — see attention.attn_decode."""
     h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
     if mode == "train":
         a = attention.attn_train(p["attn"], h, cfg, positions=positions,
@@ -98,7 +100,8 @@ def attn_layer(p, x, cfg, *, mode, positions, cache=None, causal=True,
             block_causal=block_causal)
     else:
         a, new_cache = attention.attn_decode(
-            p["attn"], h, cfg, positions=positions, cache=cache)
+            p["attn"], h, cfg, positions=positions, cache=cache,
+            n_valid=n_valid)
     x = x + _name_block_out(a)
     h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
     f, aux = _mlp_or_moe(p, h, cfg)

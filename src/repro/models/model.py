@@ -233,6 +233,49 @@ class LM:
             }}
         raise ValueError(fam)
 
+    def _cache_batch_axes(self, cache: Params):
+        """Per-leaf batch-axis index, aligned with ``jax.tree.flatten``."""
+        leaves, treedef = jax.tree.flatten(cache)
+        spec_leaves = treedef.flatten_up_to(self.cache_specs())
+        return leaves, treedef, [s.index("batch") for s in spec_leaves]
+
+    def cache_row(self, cache: Params, slot) -> Params:
+        """Extract batch row ``slot`` of the cache as a batch-1 cache —
+        the read half of the paged cache's slot-indexed update.
+        jit-compatible (``slot`` may be traced)."""
+        leaves, treedef, axes = self._cache_batch_axes(cache)
+        rows = [jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=ax)
+                for l, ax in zip(leaves, axes)]
+        return jax.tree.unflatten(treedef, rows)
+
+    def set_cache_row(self, cache: Params, slot, row: Params) -> Params:
+        """Write a batch-1 cache back into batch row ``slot`` (the write
+        half of the slot-indexed update)."""
+        leaves, treedef, axes = self._cache_batch_axes(cache)
+        row_leaves = treedef.flatten_up_to(row)
+        out = [jax.lax.dynamic_update_slice_in_dim(l, r.astype(l.dtype),
+                                                   slot, axis=ax)
+               for l, r, ax in zip(leaves, row_leaves, axes)]
+        return jax.tree.unflatten(treedef, out)
+
+    def reset_cache_slots(self, cache: Params, slot_mask: jax.Array) -> Params:
+        """Zero the cache rows (KV entries, positions, states) of the batch
+        slots selected by ``slot_mask`` (B,) bool — the slot-recycling
+        primitive of the paged serving cache.  jit-compatible: the batch
+        axis of every leaf is located via ``cache_specs()`` and the masked
+        rows are overwritten with zeros of the leaf dtype.
+        """
+        leaves, treedef, axes = self._cache_batch_axes(cache)
+
+        def reset(leaf, ax):
+            shape = [1] * leaf.ndim
+            shape[ax] = leaf.shape[ax]
+            m = slot_mask.reshape(shape)
+            return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+
+        return jax.tree.unflatten(
+            treedef, [reset(l, ax) for l, ax in zip(leaves, axes)])
+
     # ------------------------------------------------------------------
     # forward
     # ------------------------------------------------------------------
@@ -245,6 +288,7 @@ class LM:
         mode: str = "train",
         cache: Optional[Params] = None,
         extra: Optional[Dict[str, jax.Array]] = None,
+        n_valid: Optional[jax.Array] = None,   # (B,) decode-mode ragged rows
     ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
         cfg = self.cfg
         x = layers.embed(tokens, params["embed"], dtype_of(cfg.compute_dtype))
@@ -273,8 +317,13 @@ class LM:
                                       cfg.norm_eps)
                 ctx = enc
 
+        if n_valid is not None and cfg.family not in ("dense", "moe"):
+            raise NotImplementedError(
+                "ragged decode rows (n_valid) require a pure-attention "
+                f"cache; family {cfg.family!r} is unsupported")
         step = functools.partial(
-            self._period_step, mode=mode, positions=positions, ctx=ctx)
+            self._period_step, mode=mode, positions=positions, ctx=ctx,
+            n_valid=n_valid)
         stacked_cache = None
         if cache is not None:
             stacked_cache = cache.get("layers") or cache.get("periods")
@@ -298,7 +347,7 @@ class LM:
         return logits.astype(jnp.float32), new_cache, aux
 
     # ------------------------------------------------------------------
-    def _period_step(self, x, p, c, *, mode, positions, ctx):
+    def _period_step(self, x, p, c, *, mode, positions, ctx, n_valid=None):
         """One scan step: a single layer (homogeneous) or one period."""
         cfg = self.cfg
         fam = cfg.family
@@ -307,7 +356,7 @@ class LM:
         if fam in ("dense", "moe"):
             x, nc, aux = blocks.attn_layer(
                 p, x, cfg, mode=mode, positions=positions,
-                cache=c if mode != "train" else None)
+                cache=c if mode != "train" else None, n_valid=n_valid)
             return x, nc, aux
 
         if fam == "ssm":

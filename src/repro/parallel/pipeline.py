@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import compat
+
 
 def pipeline_stats(n_stages: int, n_micro: int) -> Dict[str, float]:
     ticks = n_stages + n_micro - 1
@@ -82,8 +84,8 @@ def pipeline_apply(
         return jax.lax.psum(outputs * is_last, axis)
 
     pspec = jax.tree.map(lambda _: P(axis), stage_params)
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         stage_body, mesh=mesh,
         in_specs=(pspec, P()), out_specs=P(),
-        check_vma=False)
+        check=False)
     return fn(stage_params, x_micro)

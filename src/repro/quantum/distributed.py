@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compat import shard_map
 from repro.quantum.gates import Gate
 from repro.quantum import qsim
 
@@ -46,7 +47,7 @@ def distributed_apply(re, im, gate: Gate, mesh: Mesh, axis: str = "data"):
         def local_fn(re_s, im_s):
             return _apply_local(re_s, im_s, mat, gate.qubit, gate.control)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             local_fn, mesh=mesh, in_specs=(P(axis), P(axis)),
             out_specs=(P(axis), P(axis)))
         return fn(re, im)
@@ -90,7 +91,7 @@ def distributed_apply(re, im, gate: Gate, mesh: Mesh, axis: str = "data"):
                 out_i = jnp.where(cmask == 1, out_i, im_s)
             return out_r, out_i
 
-        fn = jax.shard_map(
+        fn = shard_map(
             global_fn, mesh=mesh, in_specs=(P(axis), P(axis)),
             out_specs=(P(axis), P(axis)))
         return fn(re, im)
@@ -104,7 +105,7 @@ def distributed_apply(re, im, gate: Gate, mesh: Mesh, axis: str = "data"):
         nr, ni = _apply_local(re_s, im_s, mat, gate.qubit, None)
         return (jnp.where(on, nr, re_s), jnp.where(on, ni, im_s))
 
-    fn = jax.shard_map(
+    fn = shard_map(
         ctrl_fn, mesh=mesh, in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis)))
     return fn(re, im)

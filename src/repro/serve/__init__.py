@@ -1,5 +1,14 @@
+from repro.serve.cache import PagedKVCache, PageTable  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
-    ServeEngine,
+    ContinuousBatchingEngine,
+    EngineStats,
+    StaticBatchEngine,
     make_prefill_step,
     make_serve_step,
+)
+from repro.serve.scheduler import (  # noqa: F401
+    Request,
+    RequestState,
+    Scheduler,
+    StepPlan,
 )

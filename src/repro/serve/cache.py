@@ -1,0 +1,149 @@
+"""Paged/slotted KV-cache bookkeeping for the continuous-batching engine.
+
+Host-side only — no jax imports.  The device-side KV tensors are the
+model's batched cache (``LM.init_cache(n_slots, max_len)``); this module
+manages the two resources layered on top of it, in the style of the
+paged-KV runners (vLLM / sarathi block managers, hyadmin page tables):
+
+  * **slots** — batch rows of the fixed-shape jitted step.  A request owns
+    one slot from admission until it finishes (EOS / max-len) or is
+    preempted; the slot is then recycled for the next queued request.
+  * **pages** — fixed-size chunks of KV capacity.  Each slot's pages are
+    allocated lazily as its sequence grows (prompt chunks commit, decode
+    tokens append) and freed together on release.  The page budget may be
+    smaller than ``n_slots * pages_per_slot`` (oversubscription), in which
+    case admission and decode growth can fail -> the scheduler reacts by
+    queueing / preempting.
+
+``PageTable`` is the free-list; ``PagedKVCache`` adds the per-slot view
+(page lists, committed lengths) and the occupancy metrics the engine
+reports.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+
+class PageTable:
+    """Fixed-size page free-list (ids ``0..n_pages-1``)."""
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages <= 0 or page_size <= 0:
+            raise ValueError("n_pages and page_size must be positive")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._used: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold ``n_tokens`` tokens."""
+        return -(-n_tokens // self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.n_free
+
+    def alloc(self, n: int) -> List[int]:
+        if not self.can_alloc(n):
+            raise RuntimeError(
+                f"page table exhausted: want {n}, free {self.n_free}")
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            self._used.remove(p)
+            self._free.append(p)
+
+
+@dataclasses.dataclass
+class SlotInfo:
+    pages: List[int]
+    length: int                 # committed tokens (prompt written + generated)
+
+
+class PagedKVCache:
+    """Slot pool + page accounting over a ``(n_slots, max_len)`` KV cache.
+
+    ``page_budget`` defaults to full backing (``n_slots * pages_per_slot``,
+    admission never blocks on pages); pass a smaller budget to model
+    memory-constrained serving where the scheduler must queue or preempt.
+    """
+
+    def __init__(self, n_slots: int, max_len: int, page_size: int = 16,
+                 page_budget: Optional[int] = None):
+        if max_len % page_size:
+            raise ValueError(
+                f"max_len {max_len} must be a multiple of page_size "
+                f"{page_size}")
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_slot = max_len // page_size
+        budget = (n_slots * self.pages_per_slot if page_budget is None
+                  else page_budget)
+        self.table = PageTable(budget, page_size)
+        self.slots: Dict[int, SlotInfo] = {}
+
+    # -- slots ----------------------------------------------------------
+    @property
+    def free_slots(self) -> List[int]:
+        return [s for s in range(self.n_slots) if s not in self.slots]
+
+    @property
+    def n_active(self) -> int:
+        return len(self.slots)
+
+    def occupancy(self) -> float:
+        """Fraction of slots currently owned by a request."""
+        return self.n_active / self.n_slots
+
+    def page_utilization(self) -> float:
+        return self.table.n_used / self.table.n_pages
+
+    # -- lifecycle ------------------------------------------------------
+    def can_admit(self, first_chunk: int) -> bool:
+        return (bool(self.free_slots)
+                and self.table.can_alloc(self.table.pages_for(first_chunk)))
+
+    def admit(self, first_chunk: int) -> int:
+        """Claim a free slot with pages for the first prompt chunk."""
+        if not self.can_admit(first_chunk):
+            raise RuntimeError("no free slot / pages for admission")
+        slot = self.free_slots[0]
+        pages = self.table.alloc(self.table.pages_for(first_chunk))
+        self.slots[slot] = SlotInfo(pages=pages, length=0)
+        return slot
+
+    def grow(self, slot: int, n_tokens: int) -> bool:
+        """Commit ``n_tokens`` more tokens to ``slot``, allocating pages as
+        the sequence crosses page boundaries.  Returns False (state
+        unchanged) if the page budget or slot capacity cannot cover it."""
+        info = self.slots[slot]
+        new_len = info.length + n_tokens
+        if new_len > self.max_len:
+            return False
+        need = self.table.pages_for(new_len) - len(info.pages)
+        if need > 0:
+            if not self.table.can_alloc(need):
+                return False
+            info.pages.extend(self.table.alloc(need))
+        info.length = new_len
+        return True
+
+    def release(self, slot: int) -> None:
+        """Free the slot and recycle all its pages."""
+        info = self.slots.pop(slot)
+        self.table.free(info.pages)
+
+    def length(self, slot: int) -> int:
+        return self.slots[slot].length

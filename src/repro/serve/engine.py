@@ -1,16 +1,44 @@
-"""Serving engine: prefill + decode steps and a simple continuous-batching
-loop.  ``make_prefill_step`` / ``make_serve_step`` return pjit-ready pure
-functions used both by the examples and the multi-pod dry-run.
+"""Serving engines: continuous batching with a paged KV cache, plus the
+legacy fixed-batch baseline.
+
+``ContinuousBatchingEngine`` is the production path: requests are
+submitted to a queue, the scheduler composes sarathi-style mixed steps
+(every in-flight decode + a bounded chunk of every in-flight prefill),
+and the engine executes each step as fixed-shape jitted calls against
+the slotted KV cache — one batched (n_slots, 1) decode plus one
+single-row (1, prefill_chunk) forward per prefilling slot, so prefill
+work never multiplies across idle rows.  Slots recycle the moment their
+request finishes, so a queued request is admitted mid-run without
+draining the batch.  Greedy and temperature sampling are both wired
+through (per request, as a traced per-row temperature vector — no
+recompilation).
+
+``StaticBatchEngine`` is the old run-to-completion engine (one prefill +
+a decode loop over a fixed batch), kept as the benchmark baseline
+(benchmarks/serve_bench.py) and for the model families whose recurrent
+state the ragged mixed step cannot address by row (ssm / hybrid / vlm /
+audio).
+
+``make_prefill_step`` / ``make_serve_step`` remain the pjit-ready pure
+functions used by the multi-pod dry-run and the SP-KV tests.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models.model import LM
+from repro.serve.cache import PagedKVCache
+from repro.serve.scheduler import Request, Scheduler, StepPlan
+
+# families whose per-slot cache is pure attention KV — the ragged
+# (n_valid) mixed step can address these by row
+MIXED_STEP_FAMILIES = ("dense", "moe")
 
 
 def make_prefill_step(model: LM) -> Callable:
@@ -44,16 +72,340 @@ def make_serve_step(model: LM, *, sample_temperature: float = 0.0) -> Callable:
     return serve_step
 
 
-class ServeEngine:
-    """Minimal batched serving loop (greedy) used by examples/tests."""
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class StepRecord:
+    wall_s: float
+    n_decode: int
+    n_prefill_tokens: int
+    occupancy: float
+    page_utilization: float
 
-    def __init__(self, model: LM, params, max_len: int, batch: int):
+
+@dataclasses.dataclass
+class EngineStats:
+    steps: List[StepRecord] = dataclasses.field(default_factory=list)
+    generated_tokens: int = 0
+    wall_s: float = 0.0
+
+    def summary(self) -> Dict[str, float]:
+        if not self.steps:
+            return {"steps": 0, "generated_tokens": 0, "tok_per_s": 0.0}
+        walls = sorted(s.wall_s for s in self.steps)
+
+        def pct(p):
+            return walls[min(len(walls) - 1, int(p * len(walls)))]
+
+        return {
+            "steps": len(self.steps),
+            "generated_tokens": self.generated_tokens,
+            "tok_per_s": (self.generated_tokens / self.wall_s
+                          if self.wall_s else 0.0),
+            "step_ms_p50": pct(0.50) * 1e3,
+            "step_ms_p95": pct(0.95) * 1e3,
+            "mean_occupancy": float(np.mean(
+                [s.occupancy for s in self.steps])),
+            "mean_page_utilization": float(np.mean(
+                [s.page_utilization for s in self.steps])),
+        }
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+class ContinuousBatchingEngine:
+    """Paged-KV continuous-batching engine (dense / moe families).
+
+    Usage::
+
+        eng = ContinuousBatchingEngine(model, params, n_slots=4, max_len=64)
+        rid = eng.submit(prompt_tokens, max_new_tokens=16)        # queued
+        results = eng.run()          # drain; {rid: np.ndarray of tokens}
+    """
+
+    def __init__(self, model: LM, params, *, n_slots: int, max_len: int,
+                 page_size: int = 16, prefill_chunk: int = 8,
+                 page_budget: Optional[int] = None,
+                 eos_id: Optional[int] = None, seed: int = 0):
+        if model.cfg.family not in MIXED_STEP_FAMILIES:
+            raise NotImplementedError(
+                f"family {model.cfg.family!r} has recurrent / cross state "
+                "the ragged mixed step cannot address by row; serve it "
+                "with StaticBatchEngine")
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.kv = PagedKVCache(n_slots, max_len, page_size,
+                               page_budget=page_budget)
+        self.sched = Scheduler(self.kv, prefill_chunk=prefill_chunk,
+                               eos_id=eos_id)
+        self.cache = model.init_cache(n_slots, max_len)
+        self._seed = seed
+        # Sampled tokens stay ON DEVICE between steps: the previous step's
+        # samples feed the next step's decode rows (token_src) and every
+        # committed sample lands in a per-slot output buffer; the host
+        # reads a row only when its request finishes.  Without EOS
+        # detection the whole run is free of per-step device syncs, so
+        # host scheduling overlaps device compute exactly like the static
+        # engine's chained decode loop.  Cache / buffers are donated
+        # (in-place updates); slot resets run as their own jitted pass
+        # only on admission steps.
+        #
+        # A step executes as one batched (n_slots, 1) decode plus one
+        # single-row (1, prefill_chunk) forward per prefilling slot
+        # (cache_row / set_cache_row) — so prefill work scales with the
+        # chunk's own tokens, never with n_slots x chunk.
+        self._decode_fn = jax.jit(self._make_decode_fn(),
+                                  donate_argnums=(1, 2, 3),
+                                  static_argnums=(12,))
+        self._prefill_fn = jax.jit(self._make_prefill_fn(),
+                                   donate_argnums=(1, 2, 3),
+                                   static_argnums=(12,))
+        self._reset_fn = jax.jit(model.reset_cache_slots,
+                                 donate_argnums=(0,))
+        # output rows outnumber slots so finished requests' tokens can
+        # stay on device until a flush point — the host reads the buffer
+        # once per ~2*n_slots finishes instead of syncing every finish
+        self._n_out_rows = 3 * n_slots
+        self._out_buf = jnp.zeros((self._n_out_rows, max_len), jnp.int32)
+        self._prev_sampled = jnp.zeros((n_slots,), jnp.int32)
+        self._free_rows = list(range(self._n_out_rows))
+        self._slot_row = np.full((n_slots,), -1, np.int32)
+        self._pending: List[Request] = []        # finished, tokens unread
+        self._pending_rows: Dict[int, int] = {}  # rid -> out row
+        self._step_idx = 0
+        self.stats = EngineStats()
+        self._results: Dict[int, np.ndarray] = {}
+
+    def _sample(self, last, temperatures, step_idx, salt, any_temp):
+        """last: (R, V) logits; returns (R,) int32 tokens.  Greedy unless
+        the row's temperature is positive (per-row, traced).  ``any_temp``
+        is a *static* flag: all-greedy steps compile without the PRNG
+        (threefry is a real cost at serving step granularity); flipping it
+        just selects the second compiled variant."""
+        greedy = jnp.argmax(last, axis=-1)
+        if not any_temp:
+            return greedy.astype(jnp.int32)
+        base_key = jax.random.key(self._seed)
+        temp = jnp.maximum(temperatures, 1e-6)[:, None]
+        key = jax.random.fold_in(jax.random.fold_in(base_key, salt),
+                                 step_idx)
+        sampled = jax.random.categorical(key, last / temp, axis=-1)
+        return jnp.where(temperatures > 0, sampled,
+                         greedy).astype(jnp.int32)
+
+    def _make_decode_fn(self):
+        model = self.model
+        n_slots = self.n_slots
+
+        def decode_step(params, cache, out_buf, prev_sampled, tokens,
+                        token_src, positions, n_valid, temperatures,
+                        out_rows, out_idx, step_idx, any_temp):
+            # decode rows take their input token from the previous step's
+            # on-device samples
+            tokens = tokens.at[:, 0].set(
+                jnp.where(token_src, prev_sampled, tokens[:, 0]))
+            logits, cache, _ = model.forward(
+                params, tokens, positions, mode="decode", cache=cache,
+                n_valid=n_valid)
+            nxt = self._sample(logits[:, 0], temperatures, step_idx, 0,
+                               any_temp)
+            # commit: sample rows write their token (to the slot's output
+            # row) and carry it forward; other rows keep their previous
+            # sample (out-of-range column drops)
+            out_buf = out_buf.at[out_rows, out_idx].set(nxt, mode="drop")
+            is_sample = out_idx < out_buf.shape[1]
+            prev_sampled = jnp.where(is_sample, nxt, prev_sampled)
+            return prev_sampled, cache, out_buf
+
+        return decode_step
+
+    def _make_prefill_fn(self):
+        model = self.model
+
+        def prefill_row(params, cache, out_buf, prev_sampled, slot,
+                        tokens, positions, n_valid, temperature, out_row,
+                        out_idx, step_idx, any_temp):
+            row = model.cache_row(cache, slot)
+            logits, row, _ = model.forward(
+                params, tokens, positions, mode="decode", cache=row,
+                n_valid=n_valid)
+            cache = model.set_cache_row(cache, slot, row)
+            # the sample comes from the last valid column (only commits —
+            # via out_idx — when the chunk completes the prompt)
+            last_col = jnp.maximum(n_valid - 1, 0)
+            last = jnp.take_along_axis(
+                logits, last_col[:, None, None], axis=1)[:, 0]   # (1, V)
+            # salt by slot so prefills finishing in the same step draw
+            # independent noise (decode rows share one batched draw)
+            nxt = self._sample(last, temperature[None], step_idx, 1 + slot,
+                               any_temp)[0]
+            out_buf = out_buf.at[out_row, out_idx].set(nxt, mode="drop")
+            prev_sampled = prev_sampled.at[slot].set(
+                jnp.where(out_idx < out_buf.shape[1], nxt,
+                          prev_sampled[slot]))
+            return prev_sampled, cache, out_buf
+
+        return prefill_row
+
+    # -- API ------------------------------------------------------------
+    def reset(self) -> None:
+        """Clear all serving state (queue, slots, cache, stats, results)
+        but keep the compiled step functions — e.g. to re-run a workload
+        without paying compilation again."""
+        self.kv = PagedKVCache(self.n_slots, self.max_len,
+                               self.kv.page_size,
+                               page_budget=self.kv.table.n_pages)
+        self.sched = Scheduler(self.kv,
+                               prefill_chunk=self.sched.prefill_chunk,
+                               eos_id=self.sched.eos_id)
+        self.cache = self.model.init_cache(self.n_slots, self.max_len)
+        self._out_buf = jnp.zeros((self._n_out_rows, self.max_len),
+                                  jnp.int32)
+        self._prev_sampled = jnp.zeros((self.n_slots,), jnp.int32)
+        self._free_rows = list(range(self._n_out_rows))
+        self._slot_row = np.full((self.n_slots,), -1, np.int32)
+        self._pending = []
+        self._pending_rows = {}
+        self._step_idx = 0
+        self.stats = EngineStats()
+        self._results = {}
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
+               temperature: float = 0.0) -> int:
+        req = self.sched.submit(np.asarray(prompt), max_new_tokens,
+                                temperature=temperature,
+                                step=self._step_idx)
+        return req.rid
+
+    def step(self) -> bool:
+        """Run one engine iteration; False when no work remains."""
+        plan = self.sched.next_plan(self._step_idx)
+        if plan is None:
+            return self.sched.has_work()
+        t0 = time.perf_counter()
+        for slot in np.nonzero(plan.reset_mask)[0]:
+            # a request enters this slot: give it a fresh output row.  A
+            # still-mapped old row can only be a preemption orphan —
+            # finished requests hand their row to _pending_rows at commit
+            # (slot_row reset to -1) — so recycle it unconditionally.
+            old = int(self._slot_row[slot])
+            if old >= 0:
+                self._free_rows.append(old)
+            if not self._free_rows:
+                self._flush_results()
+            self._slot_row[slot] = self._free_rows.pop()
+        if plan.reset_mask.any():
+            self.cache = self._reset_fn(self.cache, plan.reset_mask)
+        step_idx = np.int32(self._step_idx)
+        if plan.n_decode:
+            any_temp = bool((plan.temperatures > 0).any())
+            self._prev_sampled, self.cache, self._out_buf = self._decode_fn(
+                self.params, self.cache, self._out_buf, self._prev_sampled,
+                plan.tokens, plan.token_src, plan.positions, plan.n_valid,
+                plan.temperatures, self._slot_row.copy(), plan.out_idx,
+                step_idx, any_temp)
+        for pf in plan.prefills:
+            self._prev_sampled, self.cache, self._out_buf = self._prefill_fn(
+                self.params, self.cache, self._out_buf, self._prev_sampled,
+                np.int32(pf.slot), pf.tokens, pf.positions, pf.n_valid,
+                np.float32(pf.temperature),
+                np.int32(self._slot_row[pf.slot]), np.int32(pf.out_idx),
+                step_idx, pf.temperature > 0)
+        # EOS detection is the only per-step host sync; count-based
+        # finishing leaves the device queue free-running
+        sampled = (np.asarray(self._prev_sampled)
+                   if self.sched.eos_id is not None else None)
+        done = self.sched.commit(plan, sampled, self._step_idx)
+        for req in done:
+            # tokens stay on device; materialized at the next flush point.
+            # Row ownership moves from the slot to the pending map so the
+            # slot's next admission cannot free or alias it.
+            self._pending.append(req)
+            self._pending_rows[req.rid] = int(self._slot_row[req.finish_slot])
+            self._slot_row[req.finish_slot] = -1
+        dt = time.perf_counter() - t0
+        self.stats.steps.append(StepRecord(
+            wall_s=dt, n_decode=plan.n_decode,
+            n_prefill_tokens=plan.n_prefill_tokens,
+            occupancy=self.kv.occupancy(),
+            page_utilization=self.kv.page_utilization()))
+        self.stats.generated_tokens += len(plan.sample_slots)
+        self.stats.wall_s += dt
+        self._step_idx += 1
+        return self.sched.has_work()
+
+    def _flush_results(self) -> None:
+        """Materialize finished requests' tokens (one buffer transfer)
+        and recycle their output rows."""
+        if not self._pending:
+            return
+        buf = np.asarray(self._out_buf)
+        for req in self._pending:
+            row = self._pending_rows.pop(req.rid)
+            toks = buf[row, :req.n_generated].copy()
+            req.generated = toks.tolist()
+            self._results[req.rid] = toks
+            self._free_rows.append(row)
+        self._pending = []
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, np.ndarray]:
+        """Drain the queue; returns {rid: generated tokens}."""
+        n, stalled = 0, 0
+        while True:
+            before = self._step_idx
+            if not self.step():
+                break
+            n += 1
+            if max_steps is not None and n >= max_steps:
+                break
+            # a planless iteration with work remaining means nothing can
+            # proceed; without external arrivals that's a dead scheduler
+            # state (e.g. a page budget too small for a single request)
+            stalled = stalled + 1 if self._step_idx == before else 0
+            if stalled > self.n_slots + 2:
+                raise RuntimeError(
+                    "scheduler stalled: work queued but no step can run "
+                    "(page budget too small for an in-flight request?)")
+        self._flush_results()
+        return dict(self._results)
+
+    def requests(self) -> List[Request]:
+        return list(self.sched.finished)
+
+    # -- convenience: old-ServeEngine-shaped entry point -----------------
+    def generate(self, prompt_tokens, n_steps: int) -> jax.Array:
+        """Submit a (B, S) same-length batch greedily and decode
+        ``n_steps`` tokens each — the legacy fixed-batch calling
+        convention, served by the continuous engine."""
+        prompts = np.asarray(prompt_tokens)
+        rids = [self.submit(p, n_steps) for p in prompts]
+        results = self.run()
+        return jnp.asarray(np.stack([results[r] for r in rids]))
+
+
+# ---------------------------------------------------------------------------
+# legacy fixed-batch baseline
+# ---------------------------------------------------------------------------
+class StaticBatchEngine:
+    """Run-to-completion fixed-batch engine: one prefill + a decode loop.
+
+    The pre-continuous-batching baseline (benchmarks/serve_bench.py), and
+    the fallback for ssm / hybrid / vlm / audio families.
+    """
+
+    def __init__(self, model: LM, params, max_len: int, batch: int, *,
+                 sample_temperature: float = 0.0):
         self.model = model
         self.params = params
         self.max_len = max_len
         self.batch = batch
         self.prefill_fn = jax.jit(make_prefill_step(model))
-        self.decode_fn = jax.jit(make_serve_step(model))
+        self.decode_fn = jax.jit(make_serve_step(
+            model, sample_temperature=sample_temperature))
 
     def generate(self, prompt_tokens, n_steps: int, extra=None):
         B, S = prompt_tokens.shape

@@ -1,0 +1,331 @@
+"""Request queue + sarathi-style step composition for continuous batching.
+
+The scheduler owns all host-side serving state: the admission queue, the
+per-request lifecycle (QUEUED -> PREFILLING -> DECODING -> FINISHED), and
+the paged slot bookkeeping (``PagedKVCache``).  Each engine iteration asks
+for one ``StepPlan`` — a fixed-shape (n_slots, step_width) token batch
+composed of
+
+  * one decode token for every DECODING slot (column 0, ``n_valid = 1``),
+  * one chunk of at most ``prefill_chunk`` prompt tokens for a single
+    PREFILLING slot (``n_valid = chunk``), and
+  * ``n_valid = 0`` padding rows for idle slots,
+
+which is the chunked-prefill mixed batch of sarathi-serve: prefills are
+sliced into bounded chunks that ride along with the in-flight decodes, so
+a long prompt never stalls token emission and the step latency stays
+bounded by ``n_slots - 1 + prefill_chunk`` tokens.
+
+Page pressure: admission requires a free slot plus pages for the first
+chunk; decode growth that cannot get a page preempts the *youngest*
+running request back to the queue front (recompute-style preemption — its
+pages are freed and its prefill restarts when re-admitted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serve.cache import PagedKVCache
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (S,) int32
+    max_new_tokens: int
+    temperature: float = 0.0
+    state: RequestState = RequestState.QUEUED
+    slot: Optional[int] = None
+    prompt_pos: int = 0                # prompt tokens already committed
+    n_generated: int = 0               # tokens sampled so far (count only:
+    #                                    values live in the engine's device
+    #                                    output buffer until finish)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    finish_reason: Optional[str] = None
+    finish_slot: Optional[int] = None  # slot held when finishing
+    # step-clock timestamps (engine steps, for TTFT / latency metrics)
+    submit_step: int = -1
+    admit_step: int = -1
+    first_token_step: int = -1
+    finish_step: int = -1
+    n_preemptions: int = 0
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def prompt_done(self) -> bool:
+        return self.prompt_pos >= self.prompt_len
+
+
+@dataclasses.dataclass
+class PrefillChunk:
+    """One slot's bounded prompt chunk, executed as a single-row
+    (1, prefill_chunk) forward against that slot's extracted cache row."""
+    slot: int
+    tokens: np.ndarray                 # (1, prefill_chunk) int32, 0-padded
+    positions: np.ndarray              # (1, prefill_chunk) int32
+    n_valid: np.ndarray                # (1,) int32 — real tokens in chunk
+    temperature: float
+    out_idx: int                       # sample destination, or drop
+    completes_prompt: bool
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """One engine step: a batched (n_slots, 1) decode for every in-flight
+    decode, plus bounded single-row prefill chunks.  Row r drives slot r
+    in the decode part."""
+    tokens: np.ndarray                 # (n_slots, 1) int32
+    n_valid: np.ndarray                # (n_slots,) int32 (0 or 1)
+    positions: np.ndarray              # (n_slots, 1) int32
+    temperatures: np.ndarray           # (n_slots,) float32
+    reset_mask: np.ndarray             # (n_slots,) bool — recycled this step
+    token_src: np.ndarray              # (n_slots,) bool — the input token
+    #                                    is the previous step's on-device
+    #                                    sample (the host never sees it)
+    out_idx: np.ndarray                # (n_slots,) int32 — output-buffer
+    #                                    column for this step's sample
+    #                                    (out-of-range = discard)
+    sample_slots: List[int]            # slots whose sampled token commits
+    prefills: List[PrefillChunk]
+    n_decode: int
+
+    @property
+    def prefill_chunks(self) -> Dict[int, int]:
+        return {p.slot: int(p.n_valid[0]) for p in self.prefills}
+
+    @property
+    def n_prefill_tokens(self) -> int:
+        return sum(int(p.n_valid[0]) for p in self.prefills)
+
+
+class Scheduler:
+    def __init__(self, kv: PagedKVCache, *, prefill_chunk: int = 8,
+                 eos_id: Optional[int] = None):
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
+        self.kv = kv
+        self.prefill_chunk = prefill_chunk
+        self.eos_id = eos_id
+        self.queue: Deque[Request] = deque()
+        self.active: Dict[int, Request] = {}       # slot -> request
+        self.finished: List[Request] = []
+        self._admission_order: List[int] = []      # slots, oldest first
+        self._next_rid = 0
+
+    # -- intake ---------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
+               temperature: float = 0.0, step: int = 0) -> Request:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.shape[0] == 0:
+            raise ValueError("empty prompt")
+        if prompt.shape[0] + max_new_tokens > self.kv.max_len:
+            raise ValueError(
+                f"prompt ({prompt.shape[0]}) + max_new_tokens "
+                f"({max_new_tokens}) exceeds max_len {self.kv.max_len}")
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      temperature=temperature, submit_step=step)
+        self._next_rid += 1
+        self.queue.append(req)
+        return req
+
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    # -- composition ----------------------------------------------------
+    def _admit(self, step: int) -> List[int]:
+        """Move queued requests into free slots while slot+page budget
+        allows; returns the slots admitted this step (need a cache reset)."""
+        admitted = []
+        while self.queue:
+            req = self.queue[0]
+            first_chunk = min(self.prefill_chunk, req.prompt_len)
+            if not self.kv.can_admit(first_chunk):
+                break
+            self.queue.popleft()
+            slot = self.kv.admit(first_chunk)
+            req.state = RequestState.PREFILLING
+            req.slot = slot
+            req.prompt_pos = 0
+            req.n_generated = 0
+            req.generated = []
+            req.admit_step = step
+            self.active[slot] = req
+            self._admission_order.append(slot)
+            admitted.append(slot)
+        return admitted
+
+    def _preempt_youngest(self, younger_than: Optional[int] = None
+                          ) -> Optional[int]:
+        """Push the most recently admitted request back to the queue front
+        (pages freed, prefill restarts on re-admission).  Only requests
+        admitted *after* ``younger_than`` are candidates — a stalled
+        request never evicts its elders (it waits instead), so the oldest
+        in-flight request always progresses and the system cannot
+        livelock on mutual eviction."""
+        cutoff = (self._admission_order.index(younger_than) + 1
+                  if younger_than is not None else 0)
+        for slot in reversed(self._admission_order[cutoff:]):
+            self._admission_order.remove(slot)
+            req = self.active.pop(slot)
+            self.kv.release(slot)
+            req.state = RequestState.QUEUED
+            req.slot = None
+            req.prompt_pos = 0
+            req.n_generated = 0
+            req.generated = []
+            req.n_preemptions += 1
+            self.queue.appendleft(req)
+            return slot
+        return None
+
+    def next_plan(self, step: int) -> Optional[StepPlan]:
+        """Compose the next mixed step, or None when nothing is runnable."""
+        reset_slots = set(self._admit(step))
+
+        # decode rows: ensure each decoding slot can grow by one token;
+        # on page exhaustion preempt the youngest other request (younger
+        # slots are dropped before older ones ever stall)
+        decode_slots: List[int] = []
+        for slot in list(self._admission_order):
+            req = self.active.get(slot)
+            if req is None or req.state is not RequestState.DECODING:
+                continue
+            ok = self.kv.grow(slot, 1)
+            while not ok and self.kv.length(slot) < self.kv.max_len:
+                if self._preempt_youngest(younger_than=slot) is None:
+                    break
+                ok = self.kv.grow(slot, 1)
+            if ok:
+                decode_slots.append(slot)
+            # else: the request waits this step, slot stays allocated
+
+        # prefill chunks: EVERY prefilling slot advances by up to
+        # ``prefill_chunk`` tokens this step.  Each chunk runs as its own
+        # single-row forward against the slot's extracted cache row, so a
+        # prefill costs its own tokens only — decode rows never pay for a
+        # riding chunk's width (the sarathi mixed step, decomposed).
+        width = self.prefill_chunk
+        prefills: List[PrefillChunk] = []
+        for slot in list(self._admission_order):
+            req = self.active.get(slot)
+            if req is None or req.state is not RequestState.PREFILLING:
+                continue
+            want = min(width, req.prompt_len - req.prompt_pos)
+            ok = self.kv.grow(slot, want)
+            while not ok:
+                # page pressure: preempt the youngest strictly-younger
+                # request (it may be one of this step's decode rows —
+                # drop it there); with none to evict, wait a step
+                victim = self._preempt_youngest(younger_than=slot)
+                if victim is None:
+                    break
+                if victim in decode_slots:
+                    decode_slots.remove(victim)
+                ok = self.kv.grow(slot, want)
+            if not ok:
+                continue
+            start = req.prompt_pos
+            ptokens = np.zeros((1, width), np.int32)
+            ptokens[0, :want] = req.prompt[start:start + want]
+            completes = start + want >= req.prompt_len
+            prefills.append(PrefillChunk(
+                slot=slot, tokens=ptokens,
+                positions=start + np.arange(width, dtype=np.int32)[None],
+                n_valid=np.array([want], np.int32),
+                temperature=req.temperature,
+                # a prompt-completing chunk's sample is generated token #1
+                out_idx=(req.n_generated if completes else self.kv.max_len),
+                completes_prompt=completes))
+
+        if not decode_slots and not prefills:
+            return None
+
+        n = self.kv.n_slots
+        tokens = np.zeros((n, 1), np.int32)
+        n_valid = np.zeros((n,), np.int32)
+        positions = np.zeros((n, 1), np.int32)
+        temps = np.zeros((n,), np.float32)
+        reset = np.zeros((n,), bool)
+        token_src = np.zeros((n,), bool)
+        out_idx = np.full((n,), self.kv.max_len, np.int32)   # default: drop
+        sample_slots: List[int] = []
+
+        for slot in reset_slots:
+            reset[slot] = True
+
+        for slot in decode_slots:
+            req = self.active[slot]
+            # the input token is the previous sample for this slot — it
+            # lives on device; the engine splices it in (token_src)
+            token_src[slot] = True
+            positions[slot, 0] = req.prompt_len + req.n_generated - 1
+            n_valid[slot] = 1
+            temps[slot] = req.temperature
+            out_idx[slot] = req.n_generated
+            sample_slots.append(slot)
+
+        sample_slots.extend(p.slot for p in prefills if p.completes_prompt)
+
+        return StepPlan(tokens=tokens, n_valid=n_valid, positions=positions,
+                        temperatures=temps, reset_mask=reset,
+                        token_src=token_src, out_idx=out_idx,
+                        sample_slots=sample_slots, prefills=prefills,
+                        n_decode=len(decode_slots))
+
+    # -- commit ---------------------------------------------------------
+    def commit(self, plan: StepPlan, sampled: Optional[np.ndarray],
+               step: int) -> List[Request]:
+        """Apply one step's results; returns requests finished this step.
+
+        ``sampled`` (the host copy of this step's samples) is only
+        required when EOS detection is on; count-based finishing works
+        without ever reading token values (the engine keeps them on
+        device until a request completes).
+        """
+        if self.eos_id is not None and sampled is None:
+            raise ValueError("eos_id set but no sampled tokens provided")
+        for slot, chunk in plan.prefill_chunks.items():
+            req = self.active[slot]
+            req.prompt_pos += chunk
+            if req.prompt_done:
+                req.state = RequestState.DECODING
+        done: List[Request] = []
+        for slot in plan.sample_slots:
+            req = self.active[slot]
+            req.n_generated += 1
+            if req.n_generated == 1:
+                req.first_token_step = step
+            if (self.eos_id is not None
+                    and int(sampled[slot]) == self.eos_id):
+                req.finish_reason = "eos"
+            elif req.n_generated >= req.max_new_tokens:
+                req.finish_reason = "max_new_tokens"
+            elif req.prompt_len + req.n_generated >= self.kv.max_len:
+                req.finish_reason = "max_len"
+            if req.finish_reason:
+                req.state = RequestState.FINISHED
+                req.finish_step = step
+                req.finish_slot = slot
+                self.kv.release(slot)
+                self.active.pop(slot)
+                self._admission_order.remove(slot)
+                req.slot = None
+                self.finished.append(req)
+                done.append(req)
+        return done

@@ -25,8 +25,8 @@ def test_counter_calibration_matches_paper_structure():
 
 def test_hlo_collective_parsing():
     import os
-    mesh = jax.make_mesh((1,), ("x",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import AxisType, make_mesh
+    mesh = make_mesh((1,), ("x",), axis_types=(AxisType.Auto,))
     # single-device: no collectives expected
     comp = jax.jit(lambda x: x @ x).lower(
         jax.ShapeDtypeStruct((128, 128), jnp.float32)).compile()

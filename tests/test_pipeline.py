@@ -8,12 +8,11 @@ _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.launch.mesh import AxisType, make_mesh
 from repro.parallel.pipeline import pipeline_apply, pipeline_stats
 
 n_stages, n_micro, mb, d = 4, 8, 2, 16
-mesh = jax.make_mesh((n_stages,), ("stage",),
-                     axis_types=(AxisType.Auto,))
+mesh = make_mesh((n_stages,), ("stage",), axis_types=(AxisType.Auto,))
 
 # one "layer" per stage: x -> tanh(x @ w + b)
 ks = jax.random.split(jax.random.key(0), 2)

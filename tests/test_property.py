@@ -3,7 +3,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-dev.txt); "
+           "skipping property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import autotune, costmodel
 from repro.core.hlo import shape_bytes

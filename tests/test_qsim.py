@@ -61,13 +61,13 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.launch.mesh import AxisType, make_mesh
 from repro.quantum import gates, qsim
 from repro.quantum.distributed import run_distributed
 
 n, depth = 9, 4
 circuit = gates.random_circuit(n, depth, seed=5)
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
 re = jnp.zeros((2 ** n,), jnp.float32).at[0].set(1.0)
 im = jnp.zeros((2 ** n,), jnp.float32)
 sh = NamedSharding(mesh, P("data"))

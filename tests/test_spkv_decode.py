@@ -11,7 +11,7 @@ _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
-from jax.sharding import AxisType
+from repro.launch.mesh import AxisType, make_mesh
 
 from repro.configs import reduced_config
 from repro.models import build_model
@@ -39,8 +39,8 @@ for t in range(S_p, S_p + 4):
     ref_logits.append(np.asarray(lg))
 
 # SP-KV: mesh (2 data, 4 model), cache seq sharded over model
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(AxisType.Auto, AxisType.Auto))
+mesh = make_mesh((2, 4), ("data", "model"),
+                 axis_types=(AxisType.Auto, AxisType.Auto))
 rules = rules_for(cfg, mesh, sp_kv=True)
 serve = make_serve_step(model)
 with sharding_ctx(mesh, rules):
