@@ -1,5 +1,5 @@
-"""Serving throughput: continuous batching (paged KV, chunked prefill)
-vs the fixed-batch run-to-completion baseline.
+"""Serving throughput: continuous batching (paged decode state, chunked
+prefill) vs the fixed-batch run-to-completion baseline — per family.
 
 For each workload mix (slots x prompt-length band x generation-length
 band) the same request set runs through both engines:
@@ -10,14 +10,20 @@ band) the same request set runs through both engines:
   * continuous — all requests queued up front; slots recycle the moment a
     request finishes, prefills ride along in bounded chunks.
 
-Reported: aggregate generated tok/s (excluding compile — both engines are
-warmed first), step-latency percentiles, slot occupancy.  JSON rows land
-in benchmarks/results/serve_bench.json.
+``--families all`` (or a comma list: ``--families lm,ssm,vlm``) runs the
+high-variance ``mixed_gens`` mix through every family's smallest config
+via the DecodeState protocol; without the flag the three classic mixes
+run on the lm config.  CPU wall timings on this class of box swing ±50%
+between processes, so each engine pair runs REPEATS interleaved passes
+and the JSON artifact reports the **median** wall/tok-per-s (plus every
+raw wall) — trust orderings and medians, never a single number.  Rows
+land in benchmarks/results/serve_bench.json.
 """
 from __future__ import annotations
 
+import argparse
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -26,16 +32,27 @@ import numpy as np
 from benchmarks import common
 from repro.configs import reduced_config
 from repro.models import build_model
+from repro.models.decode_state import stub_context
 from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
 
 ARCH = "granite-3-2b"
+
+# smallest config per family (the per-family parity smoke set)
+FAMILY_ARCHS = {
+    "lm": "granite-3-2b",
+    "ssm": "mamba2-780m",
+    "hybrid": "jamba-v0.1-52b",
+    "vlm": "llama-3.2-vision-90b",
+    "audio": "whisper-base",
+}
 
 #          name        slots prompt-band  gen-band   requests
 MIXES = [("uniform",       4, (24, 25),   (16, 17),   8),
          ("mixed_prompts", 4, (8, 33),    (16, 17),   8),
          ("mixed_gens",    4, (8, 33),    (2, 97),   24)]
+HIGH_VARIANCE_MIX = MIXES[2]
 
-REPEATS = 3          # best-of, interleaved (CPU wall timings are noisy)
+REPEATS = 3          # interleaved passes; medians reported
 
 
 def _workload(rng, n, p_band, g_band, vocab):
@@ -47,7 +64,7 @@ def _workload(rng, n, p_band, g_band, vocab):
     return reqs
 
 
-def _static_pass(engine, reqs, slots, pad_to):
+def _static_pass(engine, reqs, slots, pad_to, extra=None):
     generated = 0
     t0 = time.perf_counter()
     for w0 in range(0, len(reqs), slots):
@@ -58,16 +75,17 @@ def _static_pass(engine, reqs, slots, pad_to):
         for i, (p, _) in enumerate(wave):
             batch[i, :len(p)] = p                # right-pad to fixed width
         n_steps = max(g for _, g in wave)        # wave runs to the longest
-        out = engine.generate(jnp.asarray(batch), n_steps=n_steps)
+        out = engine.generate(jnp.asarray(batch), n_steps=n_steps,
+                              extra=extra)
         jax.block_until_ready(out)
         generated += sum(g for _, g in reqs[w0:w0 + slots])
     return generated, time.perf_counter() - t0
 
 
-def _continuous_pass(engine, reqs):
+def _continuous_pass(engine, reqs, extra=None):
     engine.reset()
     for prompt, glen in reqs:
-        engine.submit(prompt, glen)
+        engine.submit(prompt, glen, extra=extra)
     t0 = time.perf_counter()
     engine.run()
     return engine.stats.summary(), time.perf_counter() - t0
@@ -77,45 +95,53 @@ def _run_pair(model, params, reqs, slots, max_len, *,
               page_size=8, prefill_chunk=32):
     """Time both engines on the same workload, interleaved (static pass,
     continuous pass, static pass, ...) so CPU-noise hits both alike;
-    best-of-REPEATS per engine."""
+    the REPEATS walls are medianed per engine."""
+    cfg = model.cfg
+    rng = np.random.default_rng(11)
+    extra_b = stub_context(cfg, rng, batch=slots)
+    extra_1 = (None if extra_b is None
+               else {k: v[0] for k, v in extra_b.items()})
+    if extra_b is not None:
+        extra_b = {k: jnp.asarray(v) for k, v in extra_b.items()}
+
     static = StaticBatchEngine(model, params, max_len=max_len, batch=slots)
     pad_to = max(len(p) for p, _ in reqs)
     jax.block_until_ready(                       # warm both jitted shapes
-        static.generate(jnp.ones((slots, pad_to), jnp.int32), n_steps=2))
+        static.generate(jnp.ones((slots, pad_to), jnp.int32), n_steps=2,
+                        extra=extra_b))
     cont = ContinuousBatchingEngine(
         model, params, n_slots=slots, max_len=max_len,
         page_size=page_size, prefill_chunk=prefill_chunk)
-    cont.submit(np.ones(prefill_chunk + 2, np.int32), 3)
+    cont.submit(np.ones(prefill_chunk + 2, np.int32), 3, extra=extra_1)
     cont.run()                                   # warm both step widths
 
-    st_best, ct_best = None, None
+    st_walls, ct_walls = [], []
+    generated, ct_summary = 0, None
     for _ in range(REPEATS):
-        generated, wall = _static_pass(static, reqs, slots, pad_to)
-        if st_best is None or wall < st_best[1]:
-            st_best = (generated, wall)
-        s, wall = _continuous_pass(cont, reqs)
-        if ct_best is None or wall < ct_best[1]:
-            ct_best = (s, wall)
+        generated, wall = _static_pass(static, reqs, slots, pad_to,
+                                       extra=extra_b)
+        st_walls.append(wall)
+        ct_summary, wall = _continuous_pass(cont, reqs, extra=extra_1)
+        ct_walls.append(wall)
 
-    generated, wall = st_best
-    st = {"tok_per_s": generated / wall, "wall_s": wall,
+    st_med = float(np.median(st_walls))
+    ct_med = float(np.median(ct_walls))
+    st = {"tok_per_s": generated / st_med, "wall_s_median": st_med,
+          "wall_s_all": [round(w, 4) for w in st_walls],
           "generated_tokens": generated}
-    s, wall = ct_best
-    ct = {"tok_per_s": s["generated_tokens"] / wall, "wall_s": wall,
-          "generated_tokens": s["generated_tokens"],
-          "step_ms_p50": s["step_ms_p50"],
-          "step_ms_p95": s["step_ms_p95"],
-          "mean_occupancy": s["mean_occupancy"]}
+    ct = {"tok_per_s": ct_summary["generated_tokens"] / ct_med,
+          "wall_s_median": ct_med,
+          "wall_s_all": [round(w, 4) for w in ct_walls],
+          "generated_tokens": ct_summary["generated_tokens"],
+          "step_ms_p50": ct_summary["step_ms_p50"],
+          "step_ms_p95": ct_summary["step_ms_p95"],
+          "mean_occupancy": ct_summary["mean_occupancy"]}
     return st, ct
 
 
-def run(measure: bool = True) -> List[Dict]:
-    cfg = reduced_config(ARCH)
-    model = build_model(cfg)
-    params = model.init_params(jax.random.key(0))
-
+def _mix_rows(cfg, model, params, mixes, family: str) -> List[Dict]:
     rows = []
-    for name, slots, p_band, g_band, n_req in MIXES:
+    for name, slots, p_band, g_band, n_req in mixes:
         rng = np.random.default_rng(7)
         reqs = _workload(rng, n_req, p_band, g_band, cfg.vocab_size)
         page = 8
@@ -123,20 +149,53 @@ def run(measure: bool = True) -> List[Dict]:
         st, ct = _run_pair(model, params, reqs, slots, max_len,
                            page_size=page)
         for engine_name, r in (("static", st), ("continuous", ct)):
-            rows.append({"mix": name, "engine": engine_name,
+            rows.append({"family": family, "arch": cfg.arch_id,
+                         "mix": name, "engine": engine_name,
                          "slots": slots, "requests": n_req,
                          "speedup_vs_static": (r["tok_per_s"]
                                                / st["tok_per_s"]), **r})
+    return rows
+
+
+def run(measure: bool = True,
+        families: Optional[List[str]] = None) -> List[Dict]:
+    rows: List[Dict] = []
+    if families:
+        if "all" in families:
+            families = list(FAMILY_ARCHS)
+        unknown = sorted(set(families) - set(FAMILY_ARCHS))
+        if unknown:
+            raise SystemExit(
+                f"unknown families {unknown}; choose from "
+                f"{sorted(FAMILY_ARCHS)} or 'all'")
+        for fam in families:
+            cfg = reduced_config(FAMILY_ARCHS[fam])
+            model = build_model(cfg)
+            params = model.init_params(jax.random.key(0))
+            rows += _mix_rows(cfg, model, params, [HIGH_VARIANCE_MIX], fam)
+    else:
+        cfg = reduced_config(ARCH)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.key(0))
+        rows += _mix_rows(cfg, model, params, MIXES, "lm")
     common.save_result("serve_bench", rows,
-                       meta={"arch": ARCH, "reduced": True})
+                       meta={"reduced": True, "repeats": REPEATS,
+                             "statistic": "median",
+                             "families": families or ["lm"]})
     common.print_table(
-        "serving throughput: continuous batching vs static (reduced "
-        f"{ARCH})", rows,
-        ["mix", "engine", "generated_tokens", "tok_per_s",
+        "serving throughput: continuous batching vs static (reduced, "
+        "median of interleaved repeats)", rows,
+        ["family", "mix", "engine", "generated_tokens", "tok_per_s",
          "speedup_vs_static", "mean_occupancy"],
-        widths={"mix": 14, "engine": 11})
+        widths={"family": 7, "mix": 14, "engine": 11})
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--families", default=None,
+                    help="'all' or comma list of "
+                         f"{sorted(FAMILY_ARCHS)} — runs the "
+                         "high-variance mix per family")
+    args = ap.parse_args()
+    run(families=args.families.split(",") if args.families else None)

@@ -37,26 +37,21 @@ def main():
         print(f"step {i}: loss={float(metrics['loss']):.4f} "
               f"grad_norm={float(metrics['grad_norm']):.3f}")
 
-    # prefill + a few greedy decode steps: the continuous-batching engine
-    # for attention-cache families, the static baseline otherwise
-    from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
-    from repro.serve.engine import MIXED_STEP_FAMILIES
+    # prefill + a few greedy decode steps: every family serves through
+    # the continuous-batching engine (DecodeState protocol); the cross-
+    # context families pass their stub frontend embeddings as extra
+    from repro.serve import ContinuousBatchingEngine
     prompt = stream.batch_for_step(99)["tokens"][:, :16]
-    if cfg.family in MIXED_STEP_FAMILIES:
-        engine = ContinuousBatchingEngine(
-            model, state["params"], n_slots=2, max_len=64, page_size=8)
-        tokens = engine.generate(prompt, n_steps=8)
-    else:
-        engine = StaticBatchEngine(model, state["params"], max_len=64,
-                                   batch=2)
-        extra = None
-        if cfg.family == "vlm":
-            extra = {"image_embeds": jnp.ones(
-                (2, cfg.num_image_tokens, cfg.d_model), jnp.float32) * 0.01}
-        if cfg.family == "audio":
-            extra = {"audio_frames": jnp.ones(
-                (2, cfg.n_audio_ctx, cfg.d_model), jnp.float32) * 0.01}
-        tokens = engine.generate(prompt, n_steps=8, extra=extra)
+    extra = None
+    if cfg.family == "vlm":
+        extra = {"image_embeds": jnp.ones(
+            (2, cfg.num_image_tokens, cfg.d_model), jnp.float32) * 0.01}
+    if cfg.family == "audio":
+        extra = {"audio_frames": jnp.ones(
+            (2, cfg.n_audio_ctx, cfg.d_model), jnp.float32) * 0.01}
+    engine = ContinuousBatchingEngine(
+        model, state["params"], n_slots=2, max_len=64, page_size=8)
+    tokens = engine.generate(prompt, n_steps=8, extra=extra)
     print("generated:", tokens.tolist())
 
 

@@ -1,9 +1,13 @@
 """Continuous-batching serving example: more requests than slots, mixed
-prompt lengths, mixed generation lengths.  Queued requests are admitted
-into slots the moment earlier requests finish — watch the admission log
-to see a request enter a recycled slot mid-run.
+prompt lengths, mixed generation lengths — for ANY model family.  Queued
+requests are admitted into slots the moment earlier requests finish —
+watch the admission log to see a request enter a recycled slot mid-run.
+Cross-context families (vlm / audio) show the DecodeState admission
+install: each request carries its own image / audio context.
 
   PYTHONPATH=src python examples/serve_decode.py --arch granite-3-2b
+  PYTHONPATH=src python examples/serve_decode.py --arch mamba2-780m
+  PYTHONPATH=src python examples/serve_decode.py --arch whisper-base
 """
 import argparse
 import time
@@ -13,6 +17,7 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, reduced_config
 from repro.models import build_model
+from repro.models.decode_state import stub_context
 from repro.serve import ContinuousBatchingEngine
 
 
@@ -33,6 +38,7 @@ def main():
     engine = ContinuousBatchingEngine(
         model, params, n_slots=args.slots, max_len=args.max_len,
         page_size=args.page_size, prefill_chunk=args.prefill_chunk)
+    print(f"family={cfg.family}: continuous batching via DecodeState")
 
     # mixed workload: prompt lengths 5..29, generation lengths 6..16
     rng = np.random.default_rng(0)
@@ -41,7 +47,8 @@ def main():
         plen = int(rng.integers(5, 30))
         glen = int(rng.integers(6, 17))
         prompt = rng.integers(1, cfg.vocab_size, size=plen)
-        rid = engine.submit(prompt, glen, temperature=args.temperature)
+        rid = engine.submit(prompt, glen, temperature=args.temperature,
+                            extra=stub_context(cfg, rng))
         rids.append((rid, plen, glen))
         print(f"submit rid={rid} prompt_len={plen} gen_len={glen}")
 

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
-# Fast PR gate: the tier1 subset (compat shims + serving subsystem) runs
-# in well under 2 minutes; the full suite (incl. 10+ min model smoke
-# tests) stays on the nightly path:
+# Fast PR gate: the tier1 subset — compat shims + serving subsystem,
+# including the per-family continuous-vs-static parity smoke tests
+# (tests/test_serve_families.py: one smallest config per family, all
+# five of lm/ssm/hybrid/vlm/audio) — runs in under 2 minutes; the full
+# suite (incl. 10+ min model smoke tests) stays on the nightly path:
 #
 #   scripts/ci.sh               # tier1 only
 #   scripts/ci.sh --full        # entire suite

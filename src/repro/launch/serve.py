@@ -1,11 +1,11 @@
-"""Serving launcher: continuous batching with the paged-KV engine.
+"""Serving launcher: continuous batching with the paged decode state.
 
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b \
       --reduced --slots 4 --requests 8 --prompt-len 32 --gen-len 32 [--int8]
 
-Attention-cache families (dense / moe) run the continuous-batching
-engine; recurrent/cross-state families (ssm / hybrid / vlm / audio) fall
-back to the fixed-batch StaticBatchEngine.
+Every family (lm / ssm / hybrid / vlm / audio) runs the continuous-
+batching engine via the DecodeState protocol; ``--static`` selects the
+fixed-batch StaticBatchEngine baseline instead.
 """
 from __future__ import annotations
 
@@ -18,9 +18,9 @@ import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.models import build_model
+from repro.models.decode_state import stub_context
 from repro.models.quant import quantize_params
 from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
-from repro.serve.engine import MIXED_STEP_FAMILIES
 
 
 def main():
@@ -37,6 +37,8 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--int8", action="store_true",
                     help="weight-only int8 serving")
+    ap.add_argument("--static", action="store_true",
+                    help="fixed-batch StaticBatchEngine baseline")
     args = ap.parse_args()
 
     cfg = (reduced_config(args.arch) if args.reduced
@@ -51,54 +53,51 @@ def main():
     max_len = args.prompt_len + args.gen_len + 8
     rng = np.random.default_rng(1)
 
-    if cfg.family in MIXED_STEP_FAMILIES:
-        page = args.page_size
-        max_len = -(-max_len // page) * page              # round up to pages
-        engine = ContinuousBatchingEngine(
-            model, params, n_slots=args.slots, max_len=max_len,
-            page_size=page, prefill_chunk=args.prefill_chunk)
-        for _ in range(n_req):
-            plen = int(rng.integers(max(1, args.prompt_len // 2),
-                                    args.prompt_len + 1))
-            prompt = rng.integers(1, cfg.vocab_size, size=plen)
-            engine.submit(prompt, args.gen_len,
-                          temperature=args.temperature)
+    if args.static:
+        print(f"[serve] family {cfg.family!r}: StaticBatchEngine baseline")
+        engine = StaticBatchEngine(model, params, max_len=max_len,
+                                   batch=args.slots,
+                                   sample_temperature=args.temperature)
+        prompt = jax.random.randint(jax.random.key(1),
+                                    (args.slots, args.prompt_len), 1,
+                                    cfg.vocab_size)
+        extra = stub_context(cfg, rng, batch=args.slots)
+        if extra is not None:
+            extra = {k: jnp.asarray(v) for k, v in extra.items()}
         t0 = time.perf_counter()
-        engine.run()
+        out = engine.generate(prompt, n_steps=args.gen_len, extra=extra)
+        jax.block_until_ready(out)
         dt = time.perf_counter() - t0
-        s = engine.stats.summary()
-        print(f"[serve] {args.arch} slots={args.slots} requests={n_req}: "
-              f"{s['generated_tokens'] / dt:.1f} tok/s aggregate "
-              f"(incl. compile); steps={s['steps']} "
-              f"p50={s['step_ms_p50']:.1f}ms "
-              f"occupancy={s['mean_occupancy']:.2f}")
-        first = engine.requests()[0]
-        print(f"[serve] sample rid={first.rid}: "
-              f"{first.generated[:12]}")
+        print(f"[serve] {args.arch} batch={args.slots}: "
+              f"{args.gen_len * args.slots / dt:.1f} tok/s aggregate "
+              f"(incl. compile); sample: {out[0, :12].tolist()}")
         return
 
-    # recurrent / cross-state families: fixed-batch baseline
-    print(f"[serve] family {cfg.family!r}: StaticBatchEngine fallback")
-    engine = StaticBatchEngine(model, params, max_len=max_len,
-                               batch=args.slots,
-                               sample_temperature=args.temperature)
-    prompt = jax.random.randint(jax.random.key(1),
-                                (args.slots, args.prompt_len), 1,
-                                cfg.vocab_size)
-    extra = None
-    if cfg.family == "vlm":
-        extra = {"image_embeds": jnp.ones(
-            (args.slots, cfg.num_image_tokens, cfg.d_model)) * 0.01}
-    if cfg.family == "audio":
-        extra = {"audio_frames": jnp.ones(
-            (args.slots, cfg.n_audio_ctx, cfg.d_model)) * 0.01}
+    page = args.page_size
+    max_len = -(-max_len // page) * page                  # round up to pages
+    engine = ContinuousBatchingEngine(
+        model, params, n_slots=args.slots, max_len=max_len,
+        page_size=page, prefill_chunk=args.prefill_chunk)
+    for _ in range(n_req):
+        plen = int(rng.integers(max(1, args.prompt_len // 2),
+                                args.prompt_len + 1))
+        prompt = rng.integers(1, cfg.vocab_size, size=plen)
+        engine.submit(prompt, args.gen_len,
+                      temperature=args.temperature,
+                      extra=stub_context(cfg, rng))
     t0 = time.perf_counter()
-    out = engine.generate(prompt, n_steps=args.gen_len, extra=extra)
-    jax.block_until_ready(out)
+    engine.run()
     dt = time.perf_counter() - t0
-    print(f"[serve] {args.arch} batch={args.slots}: "
-          f"{args.gen_len * args.slots / dt:.1f} tok/s aggregate "
-          f"(incl. compile); sample: {out[0, :12].tolist()}")
+    s = engine.stats.summary()
+    print(f"[serve] {args.arch} ({cfg.family}) slots={args.slots} "
+          f"requests={n_req}: "
+          f"{s['generated_tokens'] / dt:.1f} tok/s aggregate "
+          f"(incl. compile); steps={s['steps']} "
+          f"p50={s['step_ms_p50']:.1f}ms "
+          f"occupancy={s['mean_occupancy']:.2f}")
+    first = engine.requests()[0]
+    print(f"[serve] sample rid={first.rid}: "
+          f"{first.generated[:12]}")
 
 
 if __name__ == "__main__":

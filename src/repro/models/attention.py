@@ -504,6 +504,17 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis):
     return _out_proj(params, out, cfg), new_cache
 
 
+def project_cross_kv(params, ctx, cfg):
+    """K/V projection of a static cross-attention context (B, T, d).
+
+    This is the read-only half of the DecodeState protocol for cross-
+    attention families: the serving engine projects a request's context
+    (image embeddings / encoder output) once at admission and installs
+    the result into the slot's cache row; decode steps then attend over
+    it without ever rewriting it."""
+    return _project_kv(params, ctx, cfg)
+
+
 def cross_attn(params, x, cfg, *, ctx=None, cached_kv=None, kv_chunk=1024):
     """Cross-attention to a static context (image patches / encoder output).
 
@@ -512,7 +523,7 @@ def cross_attn(params, x, cfg, *, ctx=None, cached_kv=None, kv_chunk=1024):
     """
     q = _project_q(params, x, cfg)
     if ctx is not None:
-        k, v = _project_kv(params, ctx, cfg)
+        k, v = project_cross_kv(params, ctx, cfg)
     else:
         k, v = cached_kv
     q = constrain(q, "batch", None, "heads", None)

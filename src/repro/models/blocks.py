@@ -133,11 +133,13 @@ def mamba_layer_specs(cfg, use_moe: bool = False, with_ffn: bool = True) -> Para
     return p
 
 
-def mamba_layer(p, x, cfg, *, mode, state=None):
+def mamba_layer(p, x, cfg, *, mode, state=None, n_valid=None):
+    """``n_valid`` only applies to decode mode — the per-row ragged mask of
+    mamba2.mamba_forward's masked recurrence."""
     h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
     y, new_state = mamba2.mamba_forward(
         p["mamba"], h, cfg, state=state if mode == "decode" else None,
-        mode=mode)
+        mode=mode, n_valid=n_valid if mode == "decode" else None)
     x = x + _name_block_out(y)
     aux = jnp.zeros((), jnp.float32)
     if "ln2" in p:

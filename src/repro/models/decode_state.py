@@ -1,0 +1,321 @@
+"""Family-agnostic DecodeState protocol: one registered pytree per family.
+
+The serving engine never branches on a model family.  Each family
+registers a :class:`DecodeStateAdapter` that lays out its *entire*
+per-slot decode state — attention KV, recurrent (conv + SSD) state,
+read-only cross-attention context — as a single pytree whose every leaf
+carries a batch ("slot") axis located by an axis-name spec tuple.  The
+engine then drives any family through the same five primitives:
+
+  ``init(model, batch, max_len)``    allocate the slotted state
+  ``specs(model)``                   axis-name tuples; ``"batch"`` marks
+                                     the slot axis of every leaf
+  ``state_row / set_state_row``      extract / insert one slot as a
+                                     batch-1 state (jit, traced slot)
+  ``reset_state_slots``              zero the rows of recycled slots
+  ``install_context``                admission-time write of a request's
+                                     read-only context (cross K/V from
+                                     image embeddings / encoder output)
+
+The sixth primitive — the row-masked ragged *write* — lives inside the
+layers themselves: ``attention.attn_decode`` drops cache scatters for
+columns past ``n_valid`` and ``mamba2.mamba_forward`` commits recurrent
+state only for rows/steps inside ``n_valid``, so a mixed prefill/decode
+step leaves idle, preempted, or finished rows' state untouched.
+
+``context_tokens(cfg)`` reports the per-slot read-only context length
+(image tokens / audio frames) so the paged cache can account the pages
+that context pins for the slot's lifetime.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention, blocks, mamba2
+from repro.models.layers import dtype_of
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# generic per-row primitives (spec-driven; family enters only via specs)
+# ---------------------------------------------------------------------------
+def batch_axes(state: Params, specs: Params):
+    """Per-leaf batch-axis index, aligned with ``jax.tree.flatten``."""
+    leaves, treedef = jax.tree.flatten(state)
+    spec_leaves = treedef.flatten_up_to(specs)
+    return leaves, treedef, [s.index("batch") for s in spec_leaves]
+
+
+def state_row(state: Params, specs: Params, slot) -> Params:
+    """Extract batch row ``slot`` as a batch-1 state — the read half of
+    the paged cache's slot-indexed update.  jit-compatible (``slot`` may
+    be traced)."""
+    leaves, treedef, axes = batch_axes(state, specs)
+    rows = [jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=ax)
+            for l, ax in zip(leaves, axes)]
+    return jax.tree.unflatten(treedef, rows)
+
+
+def set_state_row(state: Params, specs: Params, slot, row: Params) -> Params:
+    """Write a batch-1 state back into batch row ``slot`` (the write half
+    of the slot-indexed update)."""
+    leaves, treedef, axes = batch_axes(state, specs)
+    row_leaves = treedef.flatten_up_to(row)
+    out = [jax.lax.dynamic_update_slice_in_dim(l, r.astype(l.dtype),
+                                               slot, axis=ax)
+           for l, r, ax in zip(leaves, row_leaves, axes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def reset_state_slots(state: Params, specs: Params,
+                      slot_mask: jax.Array) -> Params:
+    """Zero the state rows (KV entries, positions, recurrent state,
+    installed context) of the batch slots selected by ``slot_mask`` (B,)
+    bool — the slot-recycling primitive of the paged serving cache."""
+    leaves, treedef, axes = batch_axes(state, specs)
+
+    def reset(leaf, ax):
+        shape = [1] * leaf.ndim
+        shape[ax] = leaf.shape[ax]
+        m = slot_mask.reshape(shape)
+        return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
+
+    return jax.tree.unflatten(
+        treedef, [reset(l, ax) for l, ax in zip(leaves, axes)])
+
+
+# ---------------------------------------------------------------------------
+# layout helpers
+# ---------------------------------------------------------------------------
+def _rep(tree, k: int):
+    """Stack ``k`` copies of a per-slot tree along a new leading axis."""
+    return jax.tree.map(
+        lambda t: jnp.broadcast_to(t, (k,) + t.shape).copy(), tree)
+
+
+# prefix every leaf spec with the (unsharded) stacking dim — same rule
+# the parameter stacks use
+_rep_specs = blocks.stack_specs
+
+
+def ensure_request_context(arr):
+    """The one (T, d)-or-(1, T, d) per-request context shape rule, shared
+    by ``ContinuousBatchingEngine.submit`` (host-side, np) and the
+    adapters' install path (trace-side, jnp).  A batched (B, T, d) array
+    — the *static* engine's convention — is rejected so an install can
+    never silently clobber B consecutive slots."""
+    if arr.ndim == 2:
+        arr = arr[None]
+    if arr.ndim != 3 or arr.shape[0] != 1:
+        raise ValueError(
+            f"per-request context must be (T, d) or (1, T, d); got "
+            f"{arr.shape}")
+    return arr
+
+
+def _normalize_ctx(arr, dtype) -> jax.Array:
+    return ensure_request_context(jnp.asarray(arr, dtype))
+
+
+def stub_context(cfg, rng, batch: Optional[int] = None,
+                 scale: float = 0.02) -> Optional[Dict[str, np.ndarray]]:
+    """Random stub frontend context satisfying a family's required extra
+    inputs: per-request (T, d) arrays, or batched (B, T, d) with
+    ``batch`` (the static engine's convention).  ``None`` for families
+    without context.  Shared by the serving launcher, examples,
+    benchmarks, and tests so a new family's context needs wiring in
+    exactly one place (its adapter)."""
+    adapter = get_adapter(cfg.family)
+    out = {}
+    for key in adapter.requires_extra:
+        t = adapter.context_tokens(cfg)
+        shape = ((t, cfg.d_model) if batch is None
+                 else (batch, t, cfg.d_model))
+        out[key] = (rng.standard_normal(shape) * scale).astype(np.float32)
+    return out or None
+
+
+# ---------------------------------------------------------------------------
+# adapters
+# ---------------------------------------------------------------------------
+class DecodeStateAdapter:
+    """Base adapter: no read-only context, no extra inputs."""
+
+    requires_extra: Tuple[str, ...] = ()
+
+    def context_tokens(self, cfg) -> int:
+        return 0
+
+    def init(self, model, batch: int, max_len: int) -> Params:
+        raise NotImplementedError
+
+    def specs(self, model) -> Params:
+        raise NotImplementedError
+
+    def install_context(self, model, params: Params, row: Params,
+                        extra: Dict[str, jax.Array]) -> Params:
+        """Write a request's read-only context into its batch-1 row at
+        admission.  Default: the family has no such state."""
+        return row
+
+
+class AttentionDecodeState(DecodeStateAdapter):
+    """dense / moe: one KV cache per layer."""
+
+    def init(self, model, batch, max_len):
+        cfg = model.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        return {"layers": _rep(attention.init_cache(cfg, batch, max_len,
+                                                    dtype),
+                               model.n_periods)}
+
+    def specs(self, model):
+        return {"layers": _rep_specs(attention.cache_specs(model.cfg))}
+
+
+class SSMDecodeState(DecodeStateAdapter):
+    """ssm: one recurrent (conv window + SSD ``h``) state per layer."""
+
+    def init(self, model, batch, max_len):
+        return {"layers": _rep(mamba2.init_state(model.cfg, batch),
+                               model.n_periods)}
+
+    def specs(self, model):
+        return {"layers": _rep_specs(mamba2.state_specs(model.cfg))}
+
+
+class HybridDecodeState(DecodeStateAdapter):
+    """hybrid (Jamba): per period, one attention KV + a stack of
+    per-mamba-sublayer recurrent states."""
+
+    def init(self, model, batch, max_len):
+        cfg = model.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        n = model.n_periods
+        n_mamba = cfg.attn_period - 1
+        return {"periods": {
+            "attn": _rep(attention.init_cache(cfg, batch, max_len, dtype), n),
+            "ssm": _rep(_rep(mamba2.init_state(cfg, batch), n_mamba), n),
+        }}
+
+    def specs(self, model):
+        cfg = model.cfg
+        return {"periods": {
+            "attn": _rep_specs(attention.cache_specs(cfg)),
+            "ssm": _rep_specs(_rep_specs(mamba2.state_specs(cfg))),
+        }}
+
+
+class _CrossContextMixin:
+    """Shared install path: project the context through every stacked
+    cross-attention layer's K/V heads and write the result into the
+    row's read-only ``cross_k`` / ``cross_v`` leaves."""
+
+    def _install_kv(self, model, params, row, group: str, ctx):
+        xattn = self._stacked_xattn(params)
+        k, v = jax.vmap(
+            lambda p: attention.project_cross_kv(p, ctx, model.cfg))(xattn)
+        sub = dict(row[group])
+        sub["cross_k"] = k.astype(row[group]["cross_k"].dtype)
+        sub["cross_v"] = v.astype(row[group]["cross_v"].dtype)
+        return dict(row, **{group: sub})
+
+
+class VLMDecodeState(_CrossContextMixin, DecodeStateAdapter):
+    """vlm: per period, (period-1) self-attn KV caches + read-only cross
+    K/V over the image tokens, installed at admission."""
+
+    requires_extra = ("image_embeds",)
+
+    def context_tokens(self, cfg) -> int:
+        return cfg.num_image_tokens
+
+    def init(self, model, batch, max_len):
+        cfg = model.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        h, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+        n, per = model.n_periods, cfg.cross_attn_period
+        return {"periods": {
+            "self": _rep(_rep(attention.init_cache(cfg, batch, max_len,
+                                                   dtype), per - 1), n),
+            "cross_k": jnp.zeros((n, batch, cfg.num_image_tokens, nkv, h),
+                                 dtype),
+            "cross_v": jnp.zeros((n, batch, cfg.num_image_tokens, nkv, h),
+                                 dtype),
+        }}
+
+    def specs(self, model):
+        return {"periods": {
+            "self": _rep_specs(_rep_specs(attention.cache_specs(model.cfg))),
+            "cross_k": (None, "batch", "image_tokens", "kv_heads", None),
+            "cross_v": (None, "batch", "image_tokens", "kv_heads", None),
+        }}
+
+    def _stacked_xattn(self, params):
+        return params["stack"]["cross"]["xattn"]
+
+    def install_context(self, model, params, row, extra):
+        ctx = _normalize_ctx(extra["image_embeds"],
+                             dtype_of(model.cfg.compute_dtype))
+        return self._install_kv(model, params, row, "periods", ctx)
+
+
+class AudioDecodeState(_CrossContextMixin, DecodeStateAdapter):
+    """audio (whisper enc-dec): per decoder layer, one self-attn KV +
+    read-only cross K/V over the encoder output, installed at admission
+    (the encoder runs once per request, at install time)."""
+
+    requires_extra = ("audio_frames",)
+
+    def context_tokens(self, cfg) -> int:
+        return cfg.n_audio_ctx
+
+    def init(self, model, batch, max_len):
+        cfg = model.cfg
+        dtype = dtype_of(cfg.compute_dtype)
+        h, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+        n = model.n_periods
+        return {"layers": {
+            "self": _rep(attention.init_cache(cfg, batch, max_len, dtype), n),
+            "cross_k": jnp.zeros((n, batch, cfg.n_audio_ctx, nkv, h), dtype),
+            "cross_v": jnp.zeros((n, batch, cfg.n_audio_ctx, nkv, h), dtype),
+        }}
+
+    def specs(self, model):
+        return {"layers": {
+            "self": _rep_specs(attention.cache_specs(model.cfg)),
+            "cross_k": (None, "batch", "audio_ctx", "kv_heads", None),
+            "cross_v": (None, "batch", "audio_ctx", "kv_heads", None),
+        }}
+
+    def _stacked_xattn(self, params):
+        return params["stack"]["xattn"]
+
+    def install_context(self, model, params, row, extra):
+        frames = _normalize_ctx(extra["audio_frames"],
+                                dtype_of(model.cfg.compute_dtype))
+        ctx, _ = model.encode_audio(params, frames)
+        return self._install_kv(model, params, row, "layers", ctx)
+
+
+_ADAPTERS: Dict[str, DecodeStateAdapter] = {
+    "dense": AttentionDecodeState(),
+    "moe": AttentionDecodeState(),
+    "ssm": SSMDecodeState(),
+    "hybrid": HybridDecodeState(),
+    "vlm": VLMDecodeState(),
+    "audio": AudioDecodeState(),
+}
+
+
+def get_adapter(family: str) -> DecodeStateAdapter:
+    if family not in _ADAPTERS:
+        raise ValueError(
+            f"no DecodeState adapter registered for family {family!r}; "
+            f"known: {sorted(_ADAPTERS)}")
+    return _ADAPTERS[family]

@@ -146,15 +146,76 @@ def _ssd_chunked(x, dt, A, B, C, D, chunk: int):
     return y.astype(x.dtype), h_final
 
 
+def _masked_recurrence(params, xbc, dt, A, state, n_valid, cfg):
+    """Decode-mode recurrence over the S step columns with a per-row
+    validity mask.  xbc: (B,S,conv_dim) pre-conv; dt: (B,S,h) post-softplus.
+
+    Scans t = 0..S-1: roll the conv window, apply the depthwise taps, take
+    one ``h' = h * exp(dt*A) + dt * B x`` step — then commit (window, h)
+    only where ``t < n_valid[row]``.  Invalid steps still produce a y
+    column (from the uncommitted candidate state) but the serving engine
+    reads logits only at the last *valid* column, so those are dropped.
+    Returns y: (B, S, h, p) fp32 and the committed state.
+    """
+    s = cfg.ssm
+    Bsz, S, _ = xbc.shape
+    d_inner, nheads, _ = dims(cfg)
+    n = s.ngroups * s.d_state
+    cdt = xbc.dtype
+    w = params["conv_w"].astype(cdt)                      # (k, conv_dim)
+    b = params["conv_b"].astype(cdt)
+    D = params["D"]
+    if n_valid is None:
+        valid = jnp.ones((Bsz, S), bool)
+    else:
+        valid = jnp.arange(S)[None, :] < n_valid[:, None]
+
+    def step(carry, inp):
+        h, win = carry                                    # (B,h,p,n) (B,k-1,c)
+        xbc_t, dt_t, v_t = inp                            # (B,c) (B,h) (B,)
+        window = jnp.concatenate([win, xbc_t[:, None]], axis=1)   # (B,k,c)
+        conv = (window * w[None, :, :]).sum(axis=1)
+        conv = jax.nn.silu(conv + b[None, :])
+        xs_t = conv[..., :d_inner]
+        B_t = conv[..., d_inner : d_inner + n]
+        C_t = conv[..., d_inner + n :]
+        xh_t = xs_t.reshape(Bsz, nheads, s.head_dim).astype(jnp.float32)
+        decay = jnp.exp(dt_t * A[None, :])                # (B,h)
+        xb = jnp.einsum("bhp,bn->bhpn", xh_t, B_t.astype(jnp.float32))
+        h_new = h * decay[:, :, None, None] + dt_t[:, :, None, None] * xb
+        y_t = jnp.einsum("bn,bhpn->bhp", C_t.astype(jnp.float32), h_new)
+        y_t = y_t + xh_t * D[None, :, None]
+        # row-masked ragged write: rows past their valid length keep state
+        h = jnp.where(v_t[:, None, None, None], h_new, h)
+        win = jnp.where(v_t[:, None, None], window[:, 1:], win)
+        return (h, win), y_t
+
+    (h_fin, win_fin), ys = jax.lax.scan(
+        step, (state["h"], state["conv"]),
+        (xbc.transpose(1, 0, 2), dt.transpose(1, 0, 2), valid.T))
+    y = ys.transpose(1, 0, 2, 3)                          # (B,S,h,p)
+    return y, {"h": h_fin, "conv": win_fin}
+
+
 def mamba_forward(
     params: Params, x: jax.Array, cfg,
     state: Dict[str, jax.Array] | None = None,
     mode: str = "train",
+    n_valid: jax.Array | None = None,
 ) -> Tuple[jax.Array, Dict[str, jax.Array] | None]:
     """x: (B, S, d_model).
 
     modes: ``train`` (no state), ``prefill`` (returns the final recurrent +
-    conv state for subsequent decode), ``decode`` (state in/out, S == 1).
+    conv state for subsequent decode), ``decode`` (state in/out, any S:
+    the recurrence scans the S step columns from the incoming state).
+
+    ``n_valid`` (B,) int32 — decode-mode only: the per-row count of real
+    (left-aligned) tokens in the step.  This is the DecodeState protocol's
+    row-masked ragged write for recurrent state: rows commit conv-window
+    and SSD-state updates only for steps ``t < n_valid[row]``, so in a
+    mixed prefill/decode serving batch the idle / preempted / finished
+    rows' recurrent state is left bit-for-bit untouched.  ``None`` means
+    every row is fully valid.
     """
     s = cfg.ssm
     Bsz, S, d = x.shape
@@ -172,30 +233,20 @@ def mamba_forward(
     z = constrain(z, "batch", None, "mlp")
 
     xbc = jnp.concatenate([xs, Bp, Cp], axis=-1)          # (B,S,conv_dim)
+    A = -jnp.exp(params["A_log"])                          # (h,) < 0
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
 
     new_state = None
     if mode != "decode":
+        assert n_valid is None, "n_valid is a decode-mode (ragged) feature"
         k = s.conv_kernel
         conv_tail = jnp.pad(xbc, ((0, 0), (max(k - 1 - S, 0), 0), (0, 0)))[:, -(k - 1):]
         xbc = _causal_depthwise_conv(
             xbc, params["conv_w"].astype(cdt), params["conv_b"])
-    else:
-        # decode: roll the conv window (S == 1)
-        window = jnp.concatenate([state["conv"], xbc], axis=1)  # (B,k,conv)
-        w = params["conv_w"].astype(cdt)
-        out = (window * w[None, :, :]).sum(axis=1, keepdims=True)
-        xbc = jax.nn.silu(out + params["conv_b"][None, None, :].astype(cdt))
-        new_conv = window[:, 1:]
-
-    xs = xbc[..., :d_inner]
-    Bp = xbc[..., d_inner : d_inner + n]
-    Cp = xbc[..., d_inner + n :]
-
-    A = -jnp.exp(params["A_log"])                          # (h,) < 0
-    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"][None, None, :])
-    xh = xs.reshape(Bsz, S, nheads, s.head_dim)
-
-    if mode != "decode":
+        xs = xbc[..., :d_inner]
+        Bp = xbc[..., d_inner : d_inner + n]
+        Cp = xbc[..., d_inner + n :]
+        xh = xs.reshape(Bsz, S, nheads, s.head_dim)
         y, h_final = _ssd_chunked(
             xh.astype(jnp.float32), dt, A,
             Bp.astype(jnp.float32), Cp.astype(jnp.float32),
@@ -203,17 +254,8 @@ def mamba_forward(
         if mode == "prefill":
             new_state = {"h": h_final, "conv": conv_tail}
     else:
-        # recurrent step: h' = h * exp(dt*A) + dt * B x
-        h_st = state["h"]                                  # (B,h,p,n) f32
-        dt1 = dt[:, 0]                                     # (B,h)
-        decay = jnp.exp(dt1 * A[None, :])
-        xb = jnp.einsum("bhp,bn->bhpn", xh[:, 0].astype(jnp.float32),
-                        Bp[:, 0].astype(jnp.float32))
-        h_new = h_st * decay[:, :, None, None] + dt1[:, :, None, None] * xb
-        y = jnp.einsum("bn,bhpn->bhp", Cp[:, 0].astype(jnp.float32), h_new)
-        y = y + xh[:, 0].astype(jnp.float32) * params["D"][None, :, None]
-        y = y[:, None]                                     # (B,1,h,p)
-        new_state = {"h": h_new, "conv": new_conv}
+        y, new_state = _masked_recurrence(
+            params, xbc, dt, A, state, n_valid, cfg)
 
     y = y.reshape(Bsz, S, d_inner).astype(cdt)
     # gated RMSNorm then out-projection (fp32-accumulated, no fp32 copy)

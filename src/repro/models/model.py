@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import attention, blocks, layers, mamba2
+from repro.models import attention, blocks, decode_state, layers
 from repro.models.layers import dtype_of
 from repro.parallel.axes import constrain
 
@@ -51,6 +51,9 @@ class LM:
             self.n_periods = cfg.n_layers // cfg.cross_attn_period
         else:
             self.n_periods = cfg.n_layers
+        # the family's DecodeState adapter: cache layout + specs + the
+        # admission-time context install (serving engine contract)
+        self.decode_state = decode_state.get_adapter(cfg.family)
 
     # ------------------------------------------------------------------
     # params
@@ -160,121 +163,44 @@ class LM:
         raise ValueError(fam)
 
     # ------------------------------------------------------------------
-    # cache
+    # cache (DecodeState protocol — family enters only via the adapter)
     # ------------------------------------------------------------------
     def init_cache(self, batch: int, max_len: int) -> Params:
-        cfg = self.cfg
-        dtype = dtype_of(cfg.compute_dtype)
-        n = self.n_periods
-        fam = cfg.family
-
-        def attn_c():
-            return attention.init_cache(cfg, batch, max_len, dtype)
-
-        def rep(tree, k):
-            return jax.tree.map(
-                lambda t: jnp.broadcast_to(t, (k,) + t.shape).copy(), tree)
-
-        if fam in ("dense", "moe"):
-            return {"layers": rep(attn_c(), n)}
-        if fam == "ssm":
-            return {"layers": rep(mamba2.init_state(cfg, batch), n)}
-        if fam == "hybrid":
-            n_mamba = cfg.attn_period - 1
-            return {"periods": {
-                "attn": rep(attn_c(), n),
-                "ssm": rep(rep(mamba2.init_state(cfg, batch), n_mamba), n),
-            }}
-        if fam == "vlm":
-            h, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
-            per = cfg.cross_attn_period
-            return {"periods": {
-                "self": rep(rep(attn_c(), per - 1), n),
-                "cross_k": jnp.zeros((n, batch, cfg.num_image_tokens, nkv, h), dtype),
-                "cross_v": jnp.zeros((n, batch, cfg.num_image_tokens, nkv, h), dtype),
-            }}
-        if fam == "audio":
-            h, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
-            return {"layers": {
-                "self": rep(attn_c(), n),
-                "cross_k": jnp.zeros((n, batch, cfg.n_audio_ctx, nkv, h), dtype),
-                "cross_v": jnp.zeros((n, batch, cfg.n_audio_ctx, nkv, h), dtype),
-            }}
-        raise ValueError(fam)
+        return self.decode_state.init(self, batch, max_len)
 
     def cache_specs(self) -> Params:
-        cfg = self.cfg
-        fam = cfg.family
-
-        def rep(tree):
-            return blocks.stack_specs(tree)
-
-        a = attention.cache_specs(cfg)
-        if fam in ("dense", "moe"):
-            return {"layers": rep(a)}
-        if fam == "ssm":
-            return {"layers": rep(mamba2.state_specs(cfg))}
-        if fam == "hybrid":
-            return {"periods": {
-                "attn": rep(a),
-                "ssm": rep(rep(mamba2.state_specs(cfg))),
-            }}
-        if fam == "vlm":
-            return {"periods": {
-                "self": rep(rep(a)),
-                "cross_k": (None, "batch", "image_tokens", "kv_heads", None),
-                "cross_v": (None, "batch", "image_tokens", "kv_heads", None),
-            }}
-        if fam == "audio":
-            return {"layers": {
-                "self": rep(a),
-                "cross_k": (None, "batch", "audio_ctx", "kv_heads", None),
-                "cross_v": (None, "batch", "audio_ctx", "kv_heads", None),
-            }}
-        raise ValueError(fam)
-
-    def _cache_batch_axes(self, cache: Params):
-        """Per-leaf batch-axis index, aligned with ``jax.tree.flatten``."""
-        leaves, treedef = jax.tree.flatten(cache)
-        spec_leaves = treedef.flatten_up_to(self.cache_specs())
-        return leaves, treedef, [s.index("batch") for s in spec_leaves]
+        return self.decode_state.specs(self)
 
     def cache_row(self, cache: Params, slot) -> Params:
         """Extract batch row ``slot`` of the cache as a batch-1 cache —
         the read half of the paged cache's slot-indexed update.
         jit-compatible (``slot`` may be traced)."""
-        leaves, treedef, axes = self._cache_batch_axes(cache)
-        rows = [jax.lax.dynamic_slice_in_dim(l, slot, 1, axis=ax)
-                for l, ax in zip(leaves, axes)]
-        return jax.tree.unflatten(treedef, rows)
+        return decode_state.state_row(cache, self.cache_specs(), slot)
 
     def set_cache_row(self, cache: Params, slot, row: Params) -> Params:
         """Write a batch-1 cache back into batch row ``slot`` (the write
         half of the slot-indexed update)."""
-        leaves, treedef, axes = self._cache_batch_axes(cache)
-        row_leaves = treedef.flatten_up_to(row)
-        out = [jax.lax.dynamic_update_slice_in_dim(l, r.astype(l.dtype),
-                                                   slot, axis=ax)
-               for l, r, ax in zip(leaves, row_leaves, axes)]
-        return jax.tree.unflatten(treedef, out)
+        return decode_state.set_state_row(cache, self.cache_specs(), slot,
+                                          row)
 
     def reset_cache_slots(self, cache: Params, slot_mask: jax.Array) -> Params:
-        """Zero the cache rows (KV entries, positions, states) of the batch
-        slots selected by ``slot_mask`` (B,) bool — the slot-recycling
-        primitive of the paged serving cache.  jit-compatible: the batch
-        axis of every leaf is located via ``cache_specs()`` and the masked
-        rows are overwritten with zeros of the leaf dtype.
-        """
-        leaves, treedef, axes = self._cache_batch_axes(cache)
+        """Zero the cache rows (KV entries, positions, recurrent state,
+        installed context) of the batch slots selected by ``slot_mask``
+        (B,) bool — the slot-recycling primitive of the paged serving
+        cache.  jit-compatible: the batch axis of every leaf is located
+        via ``cache_specs()``."""
+        return decode_state.reset_state_slots(cache, self.cache_specs(),
+                                              slot_mask)
 
-        def reset(leaf, ax):
-            shape = [1] * leaf.ndim
-            shape[ax] = leaf.shape[ax]
-            m = slot_mask.reshape(shape)
-            return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
-
-        return jax.tree.unflatten(
-            treedef, [reset(l, ax) for l, ax in zip(leaves, axes)])
+    def install_slot_context(self, params: Params, cache: Params, slot,
+                             extra: Dict[str, jax.Array]) -> Params:
+        """Admission-time write of a request's read-only context state
+        (cross-attention K/V from image embeddings / encoder output) into
+        its slot's cache row.  A no-op tree-copy for families without
+        such state; jit-compatible (``slot`` may be traced)."""
+        row = self.cache_row(cache, slot)
+        row = self.decode_state.install_context(self, params, row, extra)
+        return self.set_cache_row(cache, slot, row)
 
     # ------------------------------------------------------------------
     # forward
@@ -300,27 +226,9 @@ class LM:
         if cfg.family == "audio":
             enc_aux = jnp.zeros((), jnp.float32)
             if mode != "decode":
-                enc = extra["audio_frames"].astype(x.dtype)
-                B = enc.shape[0]
-                enc_pos = jnp.broadcast_to(
-                    jnp.arange(enc.shape[1])[None], enc.shape[:2])
+                ctx, enc_aux = self.encode_audio(
+                    params, extra["audio_frames"].astype(x.dtype))
 
-                def enc_step(h, p, _c):
-                    return blocks.attn_layer(
-                        p, h, cfg, mode="train", positions=enc_pos,
-                        causal=False)
-
-                enc, _, enc_aux = blocks.run_stack(
-                    enc, params["encoder"]["stack"], enc_step,
-                    n_steps=cfg.n_encoder_layers, remat=cfg.remat)
-                enc = layers.rms_norm(enc, params["encoder"]["final_norm"],
-                                      cfg.norm_eps)
-                ctx = enc
-
-        if n_valid is not None and cfg.family not in ("dense", "moe"):
-            raise NotImplementedError(
-                "ragged decode rows (n_valid) require a pure-attention "
-                f"cache; family {cfg.family!r} is unsupported")
         step = functools.partial(
             self._period_step, mode=mode, positions=positions, ctx=ctx,
             n_valid=n_valid)
@@ -347,6 +255,29 @@ class LM:
         return logits.astype(jnp.float32), new_cache, aux
 
     # ------------------------------------------------------------------
+    def encode_audio(self, params: Params, frames: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array]:
+        """Run the whisper encoder over (B, n_audio_ctx, d) frame
+        embeddings; returns (encoder output, aux loss).  Used by the
+        train/prefill forward and by the audio DecodeState adapter's
+        admission-time context install."""
+        cfg = self.cfg
+        enc = frames.astype(dtype_of(cfg.compute_dtype))
+        enc_pos = jnp.broadcast_to(
+            jnp.arange(enc.shape[1])[None], enc.shape[:2])
+
+        def enc_step(h, p, _c):
+            return blocks.attn_layer(
+                p, h, cfg, mode="train", positions=enc_pos, causal=False)
+
+        enc, _, enc_aux = blocks.run_stack(
+            enc, params["encoder"]["stack"], enc_step,
+            n_steps=cfg.n_encoder_layers, remat=cfg.remat)
+        enc = layers.rms_norm(enc, params["encoder"]["final_norm"],
+                              cfg.norm_eps)
+        return enc, enc_aux
+
+    # ------------------------------------------------------------------
     def _period_step(self, x, p, c, *, mode, positions, ctx, n_valid=None):
         """One scan step: a single layer (homogeneous) or one period."""
         cfg = self.cfg
@@ -360,7 +291,8 @@ class LM:
             return x, nc, aux
 
         if fam == "ssm":
-            x, ns, aux = blocks.mamba_layer(p, x, cfg, mode=mode, state=c)
+            x, ns, aux = blocks.mamba_layer(p, x, cfg, mode=mode, state=c,
+                                            n_valid=n_valid)
             return x, ns, aux
 
         if fam == "hybrid":
@@ -372,12 +304,13 @@ class LM:
                 if cfg.layer_kind(j) == "attn":
                     x, new_attn, a = blocks.attn_layer(
                         sub, x, cfg, mode=mode, positions=positions,
-                        cache=c["attn"] if mode != "train" else None)
+                        cache=c["attn"] if mode != "train" else None,
+                        n_valid=n_valid)
                 else:
                     st = (_tree_index(c["ssm"], midx)
                           if mode == "decode" else None)
                     x, ns, a = blocks.mamba_layer(sub, x, cfg, mode=mode,
-                                                  state=st)
+                                                  state=st, n_valid=n_valid)
                     new_ssm.append(ns)
                     midx += 1
                 aux = aux + a
@@ -394,7 +327,7 @@ class LM:
                 sc = (_tree_index(c["self"], j) if mode != "train" else None)
                 x, ns, a = blocks.attn_layer(
                     p[f"s{j}"], x, cfg, mode=mode, positions=positions,
-                    cache=sc)
+                    cache=sc, n_valid=n_valid)
                 new_self.append(ns)
                 aux = aux + a
             if mode == "decode":
@@ -423,7 +356,8 @@ class LM:
                     p["attn"], h, cfg, positions=positions, cache=c["self"])
             else:
                 a_out, new_self = attention.attn_decode(
-                    p["attn"], h, cfg, positions=positions, cache=c["self"])
+                    p["attn"], h, cfg, positions=positions, cache=c["self"],
+                    n_valid=n_valid)
             x = x + a_out
             h = layers.rms_norm(x, p["lnx"], cfg.norm_eps)
             if mode == "decode":

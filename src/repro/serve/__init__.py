@@ -1,3 +1,39 @@
+"""Serving subsystem: continuous batching over the DecodeState protocol.
+
+``ContinuousBatchingEngine`` (serve/engine.py) drives **all five workload
+families** — lm (dense/moe), ssm, hybrid, vlm, audio — through one
+family-agnostic contract, the **DecodeState protocol**
+(models/decode_state.py).  A family registers an adapter that lays out
+its entire per-slot decode state as a single pytree (every leaf carries
+a batch/"slot" axis located by an axis-name spec), and implements:
+
+  * ``init`` / ``specs`` — allocate the slotted state and describe its
+    axes;
+  * ``state_row`` / ``set_state_row`` — extract/insert one slot as a
+    batch-1 state (the paged cache's slot-indexed read/write; generic,
+    spec-driven);
+  * ``reset_state_slots`` — masked zeroing of recycled slots;
+  * ``install_context`` — admission-time write of a request's read-only
+    context (vlm image-embed / audio encoder-output cross K/V), re-run
+    after every preemption re-admission;
+  * the **row-masked ragged write** — inside the layers: attention
+    drops cache scatters past ``n_valid`` (attn_decode) and Mamba-2
+    commits conv-window/SSD-state updates only for steps inside
+    ``n_valid`` (mamba2.mamba_forward), so a mixed prefill/decode step
+    leaves idle, preempted, and finished rows' state untouched.
+
+A new family therefore needs exactly: a ``DecodeStateAdapter`` subclass
+registered in models/decode_state.py, and ``n_valid`` support in any
+stateful layer it introduces.  The engine, scheduler (admission, chunked
+prefill, youngest-first recompute-style preemption) and paged-slot
+accounting (serve/cache.py, including per-slot aux pages for installed
+context) never special-case a family.
+
+``StaticBatchEngine`` remains the run-to-completion baseline used by the
+per-family temperature-0 parity tests and benchmarks/serve_bench.py;
+``serve/sampling.py`` holds the greedy/temperature sampling shared by
+both engines.
+"""
 from repro.serve.cache import PagedKVCache, PageTable  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     ContinuousBatchingEngine,
@@ -6,6 +42,7 @@ from repro.serve.engine import (  # noqa: F401
     make_prefill_step,
     make_serve_step,
 )
+from repro.serve.sampling import sample_tokens  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     Request,
     RequestState,

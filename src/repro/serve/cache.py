@@ -69,18 +69,28 @@ class PageTable:
 class SlotInfo:
     pages: List[int]
     length: int                 # committed tokens (prompt written + generated)
+    aux_pages: List[int] = dataclasses.field(default_factory=list)
 
 
 class PagedKVCache:
     """Slot pool + page accounting over a ``(n_slots, max_len)`` KV cache.
 
-    ``page_budget`` defaults to full backing (``n_slots * pages_per_slot``,
-    admission never blocks on pages); pass a smaller budget to model
-    memory-constrained serving where the scheduler must queue or preempt.
+    ``page_budget`` defaults to full backing (``n_slots * pages_per_slot``
+    plus per-slot aux pages; admission never blocks on pages); pass a
+    smaller budget to model memory-constrained serving where the
+    scheduler must queue or preempt.
+
+    ``slot_aux_tokens`` accounts the per-slot *auxiliary* decode state of
+    the DecodeState protocol — the read-only cross-attention context
+    (image tokens / audio frames) a vlm/audio request installs at
+    admission.  Aux pages are reserved for the slot's whole lifetime
+    (they never grow with the sequence) and are released with the slot,
+    so an oversubscribed budget sees the true per-request footprint.
     """
 
     def __init__(self, n_slots: int, max_len: int, page_size: int = 16,
-                 page_budget: Optional[int] = None):
+                 page_budget: Optional[int] = None,
+                 slot_aux_tokens: int = 0):
         if max_len % page_size:
             raise ValueError(
                 f"max_len {max_len} must be a multiple of page_size "
@@ -89,8 +99,10 @@ class PagedKVCache:
         self.max_len = max_len
         self.page_size = page_size
         self.pages_per_slot = max_len // page_size
-        budget = (n_slots * self.pages_per_slot if page_budget is None
-                  else page_budget)
+        self.slot_aux_tokens = slot_aux_tokens
+        self.aux_pages_per_slot = -(-slot_aux_tokens // page_size)
+        budget = (n_slots * (self.pages_per_slot + self.aux_pages_per_slot)
+                  if page_budget is None else page_budget)
         self.table = PageTable(budget, page_size)
         self.slots: Dict[int, SlotInfo] = {}
 
@@ -112,16 +124,19 @@ class PagedKVCache:
 
     # -- lifecycle ------------------------------------------------------
     def can_admit(self, first_chunk: int) -> bool:
-        return (bool(self.free_slots)
-                and self.table.can_alloc(self.table.pages_for(first_chunk)))
+        need = (self.table.pages_for(first_chunk)
+                + self.aux_pages_per_slot)
+        return bool(self.free_slots) and self.table.can_alloc(need)
 
     def admit(self, first_chunk: int) -> int:
-        """Claim a free slot with pages for the first prompt chunk."""
+        """Claim a free slot with pages for the first prompt chunk plus
+        the slot's lifetime aux-state (context) pages."""
         if not self.can_admit(first_chunk):
             raise RuntimeError("no free slot / pages for admission")
         slot = self.free_slots[0]
         pages = self.table.alloc(self.table.pages_for(first_chunk))
-        self.slots[slot] = SlotInfo(pages=pages, length=0)
+        aux = self.table.alloc(self.aux_pages_per_slot)
+        self.slots[slot] = SlotInfo(pages=pages, length=0, aux_pages=aux)
         return slot
 
     def grow(self, slot: int, n_tokens: int) -> bool:
@@ -141,9 +156,10 @@ class PagedKVCache:
         return True
 
     def release(self, slot: int) -> None:
-        """Free the slot and recycle all its pages."""
+        """Free the slot and recycle all its pages (aux included)."""
         info = self.slots.pop(slot)
         self.table.free(info.pages)
+        self.table.free(info.aux_pages)
 
     def length(self, slot: int) -> int:
         return self.slots[slot].length

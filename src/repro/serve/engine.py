@@ -1,23 +1,31 @@
-"""Serving engines: continuous batching with a paged KV cache, plus the
-legacy fixed-batch baseline.
+"""Serving engines: continuous batching over the DecodeState protocol,
+plus the fixed-batch baseline.
 
-``ContinuousBatchingEngine`` is the production path: requests are
+``ContinuousBatchingEngine`` is the production path for *all five*
+workload families (lm/dense, moe, ssm, hybrid, vlm, audio): requests are
 submitted to a queue, the scheduler composes sarathi-style mixed steps
 (every in-flight decode + a bounded chunk of every in-flight prefill),
 and the engine executes each step as fixed-shape jitted calls against
-the slotted KV cache — one batched (n_slots, 1) decode plus one
+the slotted decode state — one batched (n_slots, 1) decode plus one
 single-row (1, prefill_chunk) forward per prefilling slot, so prefill
-work never multiplies across idle rows.  Slots recycle the moment their
-request finishes, so a queued request is admitted mid-run without
-draining the batch.  Greedy and temperature sampling are both wired
-through (per request, as a traced per-row temperature vector — no
-recompilation).
+work never multiplies across idle rows.  The engine never branches on a
+family: the model's DecodeState adapter (models/decode_state.py) lays
+out attention KV, recurrent conv/SSD state, and read-only cross context
+as one pytree with per-row primitives, and the layers implement the
+row-masked ragged write (``n_valid``) so idle / preempted / finished
+rows' state is untouched by a mixed step.  Requests with read-only
+context (vlm image embeddings, audio frames) pass it to ``submit`` as
+``extra``; it is projected and installed into the slot's cache row at
+every (re-)admission.  Slots recycle the moment their request finishes,
+so a queued request is admitted mid-run without draining the batch.
+Greedy and temperature sampling are both wired through
+(serve/sampling.py, shared with the static engine; per request, as a
+traced per-row temperature vector — no recompilation).
 
 ``StaticBatchEngine`` is the old run-to-completion engine (one prefill +
-a decode loop over a fixed batch), kept as the benchmark baseline
-(benchmarks/serve_bench.py) and for the model families whose recurrent
-state the ragged mixed step cannot address by row (ssm / hybrid / vlm /
-audio).
+a decode loop over a fixed batch), kept purely as the correctness and
+throughput baseline (benchmarks/serve_bench.py, the per-family parity
+tests).
 
 ``make_prefill_step`` / ``make_serve_step`` remain the pjit-ready pure
 functions used by the multi-pod dry-run and the SP-KV tests.
@@ -26,19 +34,17 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import decode_state
 from repro.models.model import LM
+from repro.serve import sampling  # noqa: F401  (submodule import, no cycle)
 from repro.serve.cache import PagedKVCache
 from repro.serve.scheduler import Request, Scheduler, StepPlan
-
-# families whose per-slot cache is pure attention KV — the ragged
-# (n_valid) mixed step can address these by row
-MIXED_STEP_FAMILIES = ("dense", "moe")
 
 
 def make_prefill_step(model: LM) -> Callable:
@@ -60,14 +66,12 @@ def make_serve_step(model: LM, *, sample_temperature: float = 0.0) -> Callable:
             params, tokens, positions, mode="decode", cache=cache,
             extra=extra)
         last = logits[:, -1]
-        if sample_temperature > 0:
-            # deterministic gumbel sampling keyed on position for repro
-            key = jax.random.fold_in(jax.random.key(0), positions[0, -1])
-            next_tok = jax.random.categorical(
-                key, last / sample_temperature, axis=-1)
-        else:
-            next_tok = jnp.argmax(last, axis=-1)
-        return next_tok.astype(jnp.int32), cache
+        # deterministic gumbel sampling keyed on position for repro
+        key = jax.random.fold_in(jax.random.key(0), positions[0, -1])
+        temps = jnp.full((last.shape[0],), sample_temperature, jnp.float32)
+        next_tok = sampling.sample_tokens(last, temps, key,
+                                          any_temp=sample_temperature > 0)
+        return next_tok, cache
 
     return serve_step
 
@@ -116,30 +120,32 @@ class EngineStats:
 # continuous batching
 # ---------------------------------------------------------------------------
 class ContinuousBatchingEngine:
-    """Paged-KV continuous-batching engine (dense / moe families).
+    """Paged continuous-batching engine — any family with a registered
+    DecodeState adapter (all five: lm/dense, moe, ssm, hybrid, vlm,
+    audio).
 
     Usage::
 
         eng = ContinuousBatchingEngine(model, params, n_slots=4, max_len=64)
         rid = eng.submit(prompt_tokens, max_new_tokens=16)        # queued
         results = eng.run()          # drain; {rid: np.ndarray of tokens}
+
+    Cross-context families pass the per-request context to ``submit``::
+
+        eng.submit(prompt, 16, extra={"image_embeds": embeds})    # (T, d)
     """
 
     def __init__(self, model: LM, params, *, n_slots: int, max_len: int,
                  page_size: int = 16, prefill_chunk: int = 8,
                  page_budget: Optional[int] = None,
                  eos_id: Optional[int] = None, seed: int = 0):
-        if model.cfg.family not in MIXED_STEP_FAMILIES:
-            raise NotImplementedError(
-                f"family {model.cfg.family!r} has recurrent / cross state "
-                "the ragged mixed step cannot address by row; serve it "
-                "with StaticBatchEngine")
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
-        self.kv = PagedKVCache(n_slots, max_len, page_size,
-                               page_budget=page_budget)
+        self.kv = PagedKVCache(
+            n_slots, max_len, page_size, page_budget=page_budget,
+            slot_aux_tokens=model.decode_state.context_tokens(model.cfg))
         self.sched = Scheduler(self.kv, prefill_chunk=prefill_chunk,
                                eos_id=eos_id)
         self.cache = model.init_cache(n_slots, max_len)
@@ -166,6 +172,10 @@ class ContinuousBatchingEngine:
                                    static_argnums=(12,))
         self._reset_fn = jax.jit(model.reset_cache_slots,
                                  donate_argnums=(0,))
+        # admission-time context install (vlm/audio cross K/V); compiled
+        # once — extra shapes are fixed by the config
+        self._install_fn = jax.jit(model.install_slot_context,
+                                   donate_argnums=(1,))
         # output rows outnumber slots so finished requests' tokens can
         # stay on device until a flush point — the host reads the buffer
         # once per ~2*n_slots finishes instead of syncing every finish
@@ -177,25 +187,17 @@ class ContinuousBatchingEngine:
         self._pending: List[Request] = []        # finished, tokens unread
         self._pending_rows: Dict[int, int] = {}  # rid -> out row
         self._step_idx = 0
+        self._seen_discarded = 0
         self.stats = EngineStats()
         self._results: Dict[int, np.ndarray] = {}
 
     def _sample(self, last, temperatures, step_idx, salt, any_temp):
-        """last: (R, V) logits; returns (R,) int32 tokens.  Greedy unless
-        the row's temperature is positive (per-row, traced).  ``any_temp``
-        is a *static* flag: all-greedy steps compile without the PRNG
-        (threefry is a real cost at serving step granularity); flipping it
-        just selects the second compiled variant."""
-        greedy = jnp.argmax(last, axis=-1)
-        if not any_temp:
-            return greedy.astype(jnp.int32)
-        base_key = jax.random.key(self._seed)
-        temp = jnp.maximum(temperatures, 1e-6)[:, None]
-        key = jax.random.fold_in(jax.random.fold_in(base_key, salt),
-                                 step_idx)
-        sampled = jax.random.categorical(key, last / temp, axis=-1)
-        return jnp.where(temperatures > 0, sampled,
-                         greedy).astype(jnp.int32)
+        """last: (R, V) logits; returns (R,) int32 tokens (shared
+        implementation: serve/sampling.py)."""
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self._seed), salt), step_idx)
+        return sampling.sample_tokens(last, temperatures, key,
+                                      any_temp=any_temp)
 
     def _make_decode_fn(self):
         model = self.model
@@ -258,7 +260,8 @@ class ContinuousBatchingEngine:
         without paying compilation again."""
         self.kv = PagedKVCache(self.n_slots, self.max_len,
                                self.kv.page_size,
-                               page_budget=self.kv.table.n_pages)
+                               page_budget=self.kv.table.n_pages,
+                               slot_aux_tokens=self.kv.slot_aux_tokens)
         self.sched = Scheduler(self.kv,
                                prefill_chunk=self.sched.prefill_chunk,
                                eos_id=self.sched.eos_id)
@@ -271,13 +274,37 @@ class ContinuousBatchingEngine:
         self._pending = []
         self._pending_rows = {}
         self._step_idx = 0
+        self._seen_discarded = 0
         self.stats = EngineStats()
         self._results = {}
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
-               temperature: float = 0.0) -> int:
+               temperature: float = 0.0,
+               extra: Optional[Dict[str, Any]] = None) -> int:
+        """Queue a request.  ``extra`` carries the request's read-only
+        context — (T, d) or (1, T, d) arrays, e.g. ``image_embeds`` /
+        ``audio_frames`` — required for the cross-context families."""
+        need = self.model.decode_state.requires_extra
+        missing = [k for k in need if extra is None or k not in extra]
+        if missing:
+            raise ValueError(
+                f"family {self.model.cfg.family!r} requires extra "
+                f"context {missing} at submit()")
+        unknown = [k for k in (extra or {}) if k not in need]
+        if unknown:
+            # a stray key would otherwise trigger a no-op full-cache
+            # install round-trip at every (re-)admission — and hide typos
+            raise ValueError(
+                f"family {self.model.cfg.family!r} takes no extra "
+                f"context {unknown}; it requires exactly {list(need)}")
+        if extra is not None:
+            # normalize to batch-1 host arrays so every install call
+            # shares one compiled shape (shape rule shared with the
+            # adapters' install path)
+            extra = {k: decode_state.ensure_request_context(np.asarray(v))
+                     for k, v in extra.items()}
         req = self.sched.submit(np.asarray(prompt), max_new_tokens,
-                                temperature=temperature,
+                                temperature=temperature, extra=extra,
                                 step=self._step_idx)
         return req.rid
 
@@ -300,6 +327,14 @@ class ContinuousBatchingEngine:
             self._slot_row[slot] = self._free_rows.pop()
         if plan.reset_mask.any():
             self.cache = self._reset_fn(self.cache, plan.reset_mask)
+            for slot in np.nonzero(plan.reset_mask)[0]:
+                # (re-)admission: install the request's read-only context
+                # into the freshly zeroed row (cross K/V projection; the
+                # audio adapter also runs the encoder here, once)
+                req = self.sched.active.get(int(slot))
+                if req is not None and req.extra:
+                    self.cache = self._install_fn(
+                        self.params, self.cache, np.int32(slot), req.extra)
         step_idx = np.int32(self._step_idx)
         if plan.n_decode:
             any_temp = bool((plan.temperatures > 0).any())
@@ -333,7 +368,11 @@ class ContinuousBatchingEngine:
             n_prefill_tokens=plan.n_prefill_tokens,
             occupancy=self.kv.occupancy(),
             page_utilization=self.kv.page_utilization()))
-        self.stats.generated_tokens += len(plan.sample_slots)
+        # count only *useful* tokens: samples a preemption later throws
+        # away (victim re-prefills from token 0) come back off the total
+        discarded = self.sched.discarded_tokens - self._seen_discarded
+        self._seen_discarded = self.sched.discarded_tokens
+        self.stats.generated_tokens += len(plan.sample_slots) - discarded
         self.stats.wall_s += dt
         self._step_idx += 1
         return self.sched.has_work()
@@ -377,12 +416,18 @@ class ContinuousBatchingEngine:
         return list(self.sched.finished)
 
     # -- convenience: old-ServeEngine-shaped entry point -----------------
-    def generate(self, prompt_tokens, n_steps: int) -> jax.Array:
+    def generate(self, prompt_tokens, n_steps: int, extra=None) -> jax.Array:
         """Submit a (B, S) same-length batch greedily and decode
         ``n_steps`` tokens each — the legacy fixed-batch calling
-        convention, served by the continuous engine."""
+        convention, served by the continuous engine.  ``extra`` is the
+        static engine's batched convention: (B, T, d) arrays, split into
+        per-request rows here."""
         prompts = np.asarray(prompt_tokens)
-        rids = [self.submit(p, n_steps) for p in prompts]
+        rids = [self.submit(
+            p, n_steps,
+            extra=(None if extra is None else
+                   {k: np.asarray(v)[i] for k, v in extra.items()}))
+            for i, p in enumerate(prompts)]
         results = self.run()
         return jnp.asarray(np.stack([results[r] for r in rids]))
 
@@ -393,8 +438,10 @@ class ContinuousBatchingEngine:
 class StaticBatchEngine:
     """Run-to-completion fixed-batch engine: one prefill + a decode loop.
 
-    The pre-continuous-batching baseline (benchmarks/serve_bench.py), and
-    the fallback for ssm / hybrid / vlm / audio families.
+    The pre-continuous-batching baseline, kept purely for correctness
+    (per-family temperature-0 parity tests) and throughput comparison
+    (benchmarks/serve_bench.py).  All five families serve through
+    ``ContinuousBatchingEngine`` in production.
     """
 
     def __init__(self, model: LM, params, max_len: int, batch: int, *,

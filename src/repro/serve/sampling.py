@@ -1,0 +1,30 @@
+"""Shared greedy / temperature sampling for both serving engines.
+
+One implementation, two callers: ``ContinuousBatchingEngine`` (per-row
+traced temperatures, PRNG key derived from seed/salt/step) and
+``StaticBatchEngine`` (one temperature for the whole batch, key derived
+from the decode position).  Keeping the op sequence identical is what
+makes temperature-0 token parity between the engines structural rather
+than coincidental.
+
+``any_temp`` is a *static* flag: all-greedy steps compile without the
+PRNG (threefry is a real cost at serving-step granularity); flipping it
+just selects the second compiled variant.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(last: jax.Array, temperatures: jax.Array, key,
+                  *, any_temp: bool) -> jax.Array:
+    """last: (R, V) logits; temperatures: (R,) float32; returns (R,) int32.
+
+    Greedy unless the row's temperature is positive (per-row, traced)."""
+    greedy = jnp.argmax(last, axis=-1)
+    if not any_temp:
+        return greedy.astype(jnp.int32)
+    temp = jnp.maximum(temperatures, 1e-6)[:, None]
+    sampled = jax.random.categorical(key, last / temp, axis=-1)
+    return jnp.where(temperatures > 0, sampled, greedy).astype(jnp.int32)

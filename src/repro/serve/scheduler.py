@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
@@ -46,6 +46,9 @@ class Request:
     prompt: np.ndarray                 # (S,) int32
     max_new_tokens: int
     temperature: float = 0.0
+    # per-request read-only context (image embeddings / audio frames),
+    # installed into the slot's cache row at every (re-)admission
+    extra: Optional[Dict[str, Any]] = None
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
     prompt_pos: int = 0                # prompt tokens already committed
@@ -126,10 +129,14 @@ class Scheduler:
         self.finished: List[Request] = []
         self._admission_order: List[int] = []      # slots, oldest first
         self._next_rid = 0
+        # tokens sampled by victims and thrown away by recompute-style
+        # preemption (lets the engine report *useful* throughput)
+        self.discarded_tokens = 0
 
     # -- intake ---------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
-               temperature: float = 0.0, step: int = 0) -> Request:
+               temperature: float = 0.0, step: int = 0,
+               extra: Optional[Dict[str, Any]] = None) -> Request:
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] == 0:
             raise ValueError("empty prompt")
@@ -139,7 +146,8 @@ class Scheduler:
                 f"({max_new_tokens}) exceeds max_len {self.kv.max_len}")
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
-                      temperature=temperature, submit_step=step)
+                      temperature=temperature, extra=extra,
+                      submit_step=step)
         self._next_rid += 1
         self.queue.append(req)
         return req
@@ -173,7 +181,12 @@ class Scheduler:
     def _preempt_youngest(self, younger_than: Optional[int] = None
                           ) -> Optional[int]:
         """Push the most recently admitted request back to the queue front
-        (pages freed, prefill restarts on re-admission).  Only requests
+        (pages freed, prefill restarts on re-admission).  This is
+        recompute-style preemption for *every* family's decode state: the
+        slot's cache row — attention KV and recurrent conv/SSD state
+        alike — is zeroed on re-admission (reset + context re-install)
+        and rebuilt by re-prefilling from token 0, so no state snapshot
+        ever has to be copied off the device.  Only requests
         admitted *after* ``younger_than`` are candidates — a stalled
         request never evicts its elders (it waits instead), so the oldest
         in-flight request always progresses and the system cannot
@@ -187,6 +200,7 @@ class Scheduler:
             req.state = RequestState.QUEUED
             req.slot = None
             req.prompt_pos = 0
+            self.discarded_tokens += req.n_generated
             req.n_generated = 0
             req.generated = []
             req.n_preemptions += 1

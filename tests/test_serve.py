@@ -97,6 +97,59 @@ def test_scheduler_admission_and_chunked_prefill():
     assert a.state is RequestState.DECODING
 
 
+def test_preemption_mid_prefill_restarts_from_token_zero():
+    """Page pressure from an elder's decode growth preempts the youngest
+    request while its chunked prefill is still mid-flight; the victim goes
+    back to the queue front with prompt_pos reset to 0 (recompute-style:
+    its whole decode state is rebuilt by re-prefilling on re-admission)."""
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=8, page_budget=4)
+    sched = Scheduler(kv, prefill_chunk=4)
+    a = sched.submit(np.arange(1, 16), max_new_tokens=8)     # 15 tokens
+    b = sched.submit(np.arange(1, 21), max_new_tokens=2)     # 20 tokens
+    preempted_mid_prefill = False
+    step = 0
+    while a.state is not RequestState.FINISHED:
+        was_prefilling = (b.state is RequestState.PREFILLING
+                          and 0 < b.prompt_pos < b.prompt_len)
+        plan = sched.next_plan(step)
+        if was_prefilling and b.state is RequestState.QUEUED:
+            preempted_mid_prefill = True
+            assert b.prompt_pos == 0          # restart from token 0
+            assert b.n_preemptions == 1
+        sched.commit(plan, None, step)
+        step += 1
+        assert step < 100
+    assert preempted_mid_prefill
+    # victim is re-admitted and prefills its whole prompt again
+    while b.state is not RequestState.FINISHED:
+        plan = sched.next_plan(step)
+        sched.commit(plan, None, step)
+        step += 1
+        assert step < 100
+    assert b.finish_reason == "max_new_tokens"
+
+
+def test_paged_cache_aux_state_accounting():
+    """Per-slot aux (read-only context) pages are reserved at admission,
+    never grow, and release with the slot — the vlm/audio cross-K/V
+    footprint under an oversubscribed budget."""
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=8,
+                      slot_aux_tokens=20)           # 3 aux pages per slot
+    assert kv.aux_pages_per_slot == 3
+    assert kv.table.n_pages == 2 * (4 + 3)          # default full backing
+    s0 = kv.admit(first_chunk=8)
+    assert kv.table.n_used == 1 + 3
+    assert kv.grow(s0, 32) and kv.table.n_used == 4 + 3
+    kv.release(s0)
+    assert kv.table.n_used == 0
+    # a tight budget counts aux pages against admission
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=8,
+                      slot_aux_tokens=20, page_budget=4)
+    assert kv.can_admit(8)                           # 1 + 3 aux = 4
+    kv.admit(first_chunk=8)
+    assert not kv.can_admit(8)
+
+
 def test_scheduler_admits_queued_request_into_freed_slot():
     kv = PagedKVCache(n_slots=1, max_len=32, page_size=8)
     sched = Scheduler(kv, prefill_chunk=8)
@@ -223,12 +276,39 @@ def test_oversubscribed_pages_preempt_youngest_and_recover(tiny_model):
     b = eng.submit(np.arange(1, 17), 4)
     out = eng.run()
     assert sorted(r.n_preemptions for r in eng.requests()) == [0, 1]
+    # throughput accounting counts only useful tokens: samples discarded
+    # by the preemption (victim recomputed from token 0) don't inflate it
+    assert eng.stats.generated_tokens == sum(len(t) for t in out.values())
     solo = ContinuousBatchingEngine(model, params, n_slots=1, max_len=32,
                                     page_size=8)
     sr = solo.submit(np.arange(1, 17), 4)
     ref = solo.run()[sr]
     np.testing.assert_array_equal(out[a], ref)
     np.testing.assert_array_equal(out[b], ref)
+
+
+def test_preempted_mid_prefill_request_recomputes_identically(tiny_model):
+    """Engine-level twin of the scheduler mid-prefill preemption test:
+    the same (budget, workload) shape preempts request b while its
+    chunked prefill is mid-flight; after re-admission it must re-prefill
+    from token 0 and emit exactly the tokens of an uncontended run."""
+    cfg, model, params = tiny_model
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                   page_size=8, page_budget=4,
+                                   prefill_chunk=4)
+    a = eng.submit(np.arange(1, 16), 8)          # 15 tokens, grows 3 pages
+    b = eng.submit(np.arange(1, 21), 2)          # 20 tokens, chunked prefill
+    out = eng.run()
+    reqs = {r.rid: r for r in eng.requests()}
+    assert reqs[b].n_preemptions >= 1
+    solo = ContinuousBatchingEngine(model, params, n_slots=1, max_len=32,
+                                    page_size=8, prefill_chunk=4)
+    sb = solo.submit(np.arange(1, 21), 2)
+    np.testing.assert_array_equal(solo.run()[sb], out[b])
+    solo = ContinuousBatchingEngine(model, params, n_slots=1, max_len=32,
+                                    page_size=8, prefill_chunk=4)
+    sa = solo.submit(np.arange(1, 16), 8)
+    np.testing.assert_array_equal(solo.run()[sa], out[a])
 
 
 def test_many_finishes_never_alias_output_rows(tiny_model):
@@ -259,10 +339,30 @@ def test_same_step_prefill_sampling_decorrelated(tiny_model):
     assert out[r1].tolist() != out[r2].tolist()
 
 
-def test_engine_rejects_recurrent_families():
+def test_engine_accepts_recurrent_families():
+    # the MIXED_STEP_FAMILIES gate is gone: every family with a
+    # DecodeState adapter constructs (full parity coverage lives in
+    # tests/test_serve_families.py)
     cfg = reduced_config("mamba2-780m")
     model = build_model(cfg)
     params = model.init_params(jax.random.key(0))
-    with pytest.raises(NotImplementedError):
-        ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
-                                 page_size=8)
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                   page_size=8)
+    assert eng.kv.slot_aux_tokens == 0
+
+
+def test_engine_requires_context_extra_at_submit():
+    cfg = reduced_config("whisper-base")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    eng = ContinuousBatchingEngine(model, params, n_slots=1, max_len=32,
+                                   page_size=8)
+    # audio context pins aux pages for the slot's lifetime
+    assert eng.kv.aux_pages_per_slot == -(-cfg.n_audio_ctx // 8)
+    with pytest.raises(ValueError, match="audio_frames"):
+        eng.submit(np.arange(1, 9), 4)
+    # the static engine's batched (B, T, d) convention is rejected: an
+    # install would silently clobber B consecutive slots' context
+    batched = np.zeros((2, cfg.n_audio_ctx, cfg.d_model), np.float32)
+    with pytest.raises(ValueError, match="per-request"):
+        eng.submit(np.arange(1, 9), 4, extra={"audio_frames": batched})
