@@ -1,21 +1,36 @@
-"""Shared benchmark utilities: result persistence + ASCII tables."""
+"""Shared benchmark utilities: canonical-Report persistence + ASCII tables.
+
+``save_result`` is the single write path for ``benchmarks/results/``:
+every artifact is one serialized ``repro.perf.report.Report`` (schema-
+checked by ``python -m repro.perf --validate benchmarks/results``,
+wired into ``scripts/ci.sh --bench-smoke``).
+"""
 from __future__ import annotations
 
-import json
 import pathlib
-import time
-from typing import Dict, List
+from typing import Dict, List, Optional
+
+from repro.perf import report as perf_report
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
 
 
-def save_result(name: str, rows: List[Dict], meta: Dict | None = None):
+def save_result(name: str, rows: List[Dict], meta: Dict | None = None, *,
+                reliability: Optional[Dict[str, bool]] = None,
+                channels: Optional[Dict] = None):
+    """Write ``results/<name>.json`` in the canonical Report schema.
+
+    ``reliability`` carries the calibration verdicts the rows were read
+    under (pass ``repro.perf.channels.default_calibration().verdicts`` or
+    the verdicts of an explicit calibration pass); ``channels`` an
+    optional per-benchmark channel summary block.
+    """
+    rep = perf_report.make_report(name, rows, meta=meta,
+                                  reliability=reliability,
+                                  channels=channels)
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
-    payload = {"benchmark": name, "time": time.time(),
-               "meta": meta or {}, "rows": rows}
-    (RESULTS_DIR / f"{name}.json").write_text(json.dumps(payload, indent=2,
-                                                         default=str))
-    return payload
+    (RESULTS_DIR / f"{name}.json").write_text(rep.to_json())
+    return rep.to_payload()
 
 
 def fmt(v, width=12):

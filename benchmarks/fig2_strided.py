@@ -2,34 +2,25 @@
 
 TPU columns: modeled effective throughput of the two kernel idioms
 (strided single-row DMAs vs contiguous overfetch+select) from the DMA/
-bandwidth model; host columns: measured XLA:CPU equivalents.  The paper's
-finding — overfetch ("masked vle") wins at small element width / stride,
-true strided loses a constant factor — maps to DMA granularity on TPU.
+bandwidth model; host columns: measured XLA:CPU equivalents, timed via
+``repro.perf.measure`` with the three idioms interleaved per stride so
+CPU noise hits every contender alike.  The paper's finding — overfetch
+("masked vle") wins at small element width / stride, true strided loses
+a constant factor — maps to DMA granularity on TPU.
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import TPU_V5E
+from repro.perf.measure import measure_group
 
 from benchmarks.common import print_table, save_result
 
 ROWS, LANE = 1 << 13, 128
 DMA_OVERHEAD_S = 1e-6          # per-transfer setup cost (descriptor + issue)
-
-
-def _host_time(fn, *args, iters=5):
-    jfn = jax.jit(fn)
-    jax.block_until_ready(jfn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jfn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 def model_gops(stride: int, idiom: str) -> float:
@@ -48,28 +39,39 @@ def model_gops(stride: int, idiom: str) -> float:
     return out_elems / t / 1e9
 
 
+def _idiom_fns(stride: int):
+    def strided_rowwise(x, s=stride):
+        return x[::s] + 0
+
+    def overfetch_select(x, s=stride):
+        return x.reshape(ROWS // s, s, LANE)[:, 0, :] + 0
+
+    def scalar(x, s=stride):
+        def body(i, acc):
+            return acc.at[i].set(x[i * s] + 0)
+        return jax.lax.fori_loop(
+            0, ROWS // s, body,
+            jnp.zeros((ROWS // s, LANE), jnp.float32))
+
+    return {"strided_rowwise": strided_rowwise,
+            "overfetch_select": overfetch_select,
+            "scalar": scalar}
+
+
 def run(measure: bool = True):
     x = jnp.asarray(np.random.default_rng(0).random((ROWS, LANE)),
                     jnp.float32)
     rows = []
     for stride in (2, 4, 8):
-        for idiom in ("strided_rowwise", "overfetch_select", "scalar"):
+        fns = _idiom_fns(stride)
+        walls = {}
+        if measure:
+            walls = {n: m.median_s for n, m in measure_group(
+                {n: (f, (x,)) for n, f in fns.items()}, reps=5).items()}
+        for idiom in fns:
             host = None
-            if measure:
-                if idiom == "strided_rowwise":
-                    host_fn = lambda x, s=stride: x[::s] + 0
-                elif idiom == "overfetch_select":
-                    host_fn = lambda x, s=stride: x.reshape(
-                        ROWS // s, s, LANE)[:, 0, :] + 0
-                else:
-                    def host_fn(x, s=stride):
-                        def body(i, acc):
-                            return acc.at[i].set(x[i * s] + 0)
-                        return jax.lax.fori_loop(
-                            0, ROWS // s, body,
-                            jnp.zeros((ROWS // s, LANE), jnp.float32))
-                t = _host_time(host_fn, x)
-                host = (ROWS // stride) * LANE / t / 1e9
+            if idiom in walls:
+                host = (ROWS // stride) * LANE / walls[idiom] / 1e9
             rows.append({
                 "stride": stride, "idiom": idiom,
                 "model_tpu_gops": model_gops(stride, idiom),
@@ -78,9 +80,6 @@ def run(measure: bool = True):
     print_table("Fig 2: strided-load idioms (Gelem/s)",
                 rows, ["stride", "idiom", "model_tpu_gops", "host_gops"],
                 widths={"idiom": 20})
-    best = {}
-    for r in rows:
-        best.setdefault(r["stride"], []).append(r)
     print("-> paper: masked-vle beats vlse at <=32-bit; TPU analogue: "
           "overfetch+select beats per-row strided DMA at every stride here "
           "(DMA setup dominates thin transfers).")

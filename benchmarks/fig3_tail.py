@@ -2,35 +2,24 @@
 
 Sweeps the active fraction (valid elements / padded elements) and reports
 modeled TPU throughput for both kernel idioms plus measured host times of
-the XLA equivalents.  The paper finds a constant ~35% masked penalty; the
+the XLA equivalents (``repro.perf.measure``, exact and masked interleaved
+per sweep point).  The paper finds a constant ~35% masked penalty; the
 TPU analogue = wasted-lane fraction + the per-element select.
 """
 from __future__ import annotations
-
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import TPU_V5E
-from repro.kernels.tailmask import ops as tail_ops
+from repro.perf.measure import measure as perf_measure
 
 from benchmarks.common import print_table, save_result
 
 LANE = 128
 BLOCK_ROWS = 8
 MASK_SELECT_COST = 0.18       # fractional VPU cost of the select+iota chain
-
-
-def _host_time(fn, *args, iters=5):
-    jfn = jax.jit(fn)
-    jax.block_until_ready(jfn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jfn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 def run(measure: bool = True):
@@ -51,13 +40,14 @@ def run(measure: bool = True):
         host_exact = host_mask = None
         if measure:
             hx = x[:n_valid_rows]
-            t1 = _host_time(lambda a: jax.nn.silu(a) * 2.0, hx)
             idx = jnp.arange(padded).reshape(total_rows, LANE)
-            t2 = _host_time(
-                lambda a: jnp.where(idx < n_valid,
-                                    jax.nn.silu(a) * 2.0, 0.0), x)
-            host_exact = n_valid / t1 / 1e9
-            host_mask = n_valid / t2 / 1e9
+            m = perf_measure(
+                lambda a: jax.nn.silu(a) * 2.0, hx, reps=5,
+                interleave_with={"masked": (
+                    lambda a: jnp.where(idx < n_valid,
+                                        jax.nn.silu(a) * 2.0, 0.0), (x,))})
+            host_exact = m.per_second(n_valid) / 1e9
+            host_mask = m.interleaved["masked"].per_second(n_valid) / 1e9
         rows.append({
             "active_frac": frac,
             "model_exact_gops": n_valid / t_exact / 1e9,

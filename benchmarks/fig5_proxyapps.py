@@ -3,6 +3,11 @@
 Fig 5a analogue: measured host speedups normalized to the scalar version
 (the paper normalizes to GCC-15 non-vec).  Fig 5b analogue: HLO
 op-reduction ratio vs speedup — the instruction-reduction predictor.
+
+FLOPs per version come through ``repro.perf.channels``: the scalar
+versions lower to ``while`` loops, whose flops counter calibrates
+unreliable (trip-count blindness), so their value is the analytic
+useful-flops model (``flops_source == "model"``) — visible per row.
 """
 from __future__ import annotations
 
@@ -30,18 +35,21 @@ def run(measure: bool = True):
                 "speedup_vs_scalar": speedup,
                 "op_reduction": r.get("op_reduction_vs_scalar"),
                 "tpu_model_seconds": r.get("tpu_model_seconds"),
+                "flops": r.get("flops"),
+                "flops_source": r.get("flops_source"),
             })
     print_table("Fig 5: proxy apps — speedup & instruction reduction",
                 view, ["app", "version", "host_seconds",
                        "speedup_vs_scalar", "op_reduction",
-                       "tpu_model_seconds"],
+                       "tpu_model_seconds", "flops_source"],
                 widths={"app": 9, "version": 9, "speedup_vs_scalar": 18,
                         "tpu_model_seconds": 18})
     print("-> paper: vectorization wins where compute-bound (gemm, CNNs), "
           "does nothing for stream/spmv (bandwidth/latency-bound) even "
           "with large instruction reductions.  Same pattern expected in "
           "the speedup column above.")
-    return save_result("fig5_proxyapps", view)
+    return save_result("fig5_proxyapps", view,
+                       reliability=veceval.channel_verdicts())
 
 
 if __name__ == "__main__":

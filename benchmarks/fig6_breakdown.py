@@ -32,7 +32,8 @@ def run(measure: bool = False):
           "movement ops (the loop machinery); autovec collapses them into "
           "a few fused ops — the paper's scalar-ld/st -> vector-ld/st "
           "collapse.")
-    return save_result("fig6_breakdown", view)
+    return save_result("fig6_breakdown", view,
+                       reliability=veceval.channel_verdicts())
 
 
 if __name__ == "__main__":

@@ -5,30 +5,19 @@ Two sections:
       (gemm / stream / flash) — shows the LMUL=8 VMEM-spill cliff and
       that the autotuner's choice ("compiler default") is ~optimal;
   (b) real host-measured sweep of the reference attention's kv-chunk size
-      (the jnp-path block knob) — measured analogue on this machine.
+      (the jnp-path block knob) — measured analogue on this machine, via
+      ``autotune.measured_sweep`` (repro.perf.measure: all chunk sizes
+      timed in interleaved rounds, medians reported).
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import autotune
 from repro.models.attention import chunked_attention
 
 from benchmarks.common import print_table, save_result
-
-
-def _host_time(fn, *args, iters=3):
-    jfn = jax.jit(fn)
-    jax.block_until_ready(jfn(*args))
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jfn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 def run(measure: bool = True):
@@ -61,11 +50,13 @@ def run(measure: bool = True):
         q = jax.random.normal(ks[0], (B, S, NQ, H), jnp.float32)
         k = jax.random.normal(ks[1], (B, S, NKV, H), jnp.float32)
         v = jax.random.normal(ks[2], (B, S, NKV, H), jnp.float32)
-        for chunk in (128, 256, 512, 1024, 2048):
-            t = _host_time(
-                lambda q, k, v, c=chunk: chunked_attention(
-                    q, k, v, causal=True, kv_chunk=c), q, k, v)
-            chunk_rows.append({"kv_chunk": chunk, "host_ms": t * 1e3})
+        candidates = {
+            str(chunk): (lambda q, k, v, c=chunk: chunked_attention(
+                q, k, v, causal=True, kv_chunk=c), (q, k, v))
+            for chunk in (128, 256, 512, 1024, 2048)}
+        walls = autotune.measured_sweep(candidates, reps=3)
+        chunk_rows = [{"kv_chunk": int(c), "host_ms": t * 1e3}
+                      for c, t in walls.items()]
         print_table("Fig 7b: reference-attention kv-chunk sweep (host)",
                     chunk_rows, ["kv_chunk", "host_ms"])
     print("-> paper: default LMUL ~ optimal; LMUL=8 falls off a register-"

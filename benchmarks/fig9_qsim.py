@@ -7,28 +7,16 @@ layout recovers performance.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.perf.measure import measure as perf_measure
 from repro.quantum import gates, qsim
 
 from benchmarks.common import print_table, save_result
 
 N_QUBITS = 16
 DEPTH = 6
-
-
-def _time(fn, *args, iters=3):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 def run(measure: bool = True):
@@ -50,10 +38,17 @@ def run(measure: bool = True):
     }
     rows = []
     if measure:
-        t_inter = _time(variants["autovec/interleaved"], ri0)
-        t_planar = _time(variants["autovec/planar"], re0, im0)
+        # all variants timed in the same interleaved rounds (the fns are
+        # already jitted, hence jit=False); medians reported
+        m = perf_measure(
+            variants["autovec/interleaved"], ri0, reps=3, jit=False,
+            interleave_with={
+                "autovec/planar": (variants["autovec/planar"], (re0, im0)),
+                "nonvec/planar": (variants["nonvec/planar"], (re0, im0))})
+        t_inter = m.median_s
+        t_planar = m.interleaved["autovec/planar"].median_s
         # nonvec timed on a 20-gate prefix, scaled to the full circuit
-        t_nonvec = _time(variants["nonvec/planar"], re0, im0) \
+        t_nonvec = m.interleaved["nonvec/planar"].median_s \
             * (len(circuit) / 20)
         rows = [
             {"version": "nonvec/planar (scaled)", "host_seconds": t_nonvec,

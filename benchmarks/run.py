@@ -1,11 +1,15 @@
 """Benchmark orchestrator: one module per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig5] [--no-measure]
+  PYTHONPATH=src python -m benchmarks.run [--list] \
+      [--only table1_counters,fig5_proxyapps] [--no-measure]
 
 Order mirrors the paper: counter calibration (Table 1), instruction-level
 microbenchmarks (Figs 2-4), compiler-vs-kernel proxy apps (Figs 5-6), the
 LMUL/block sweep (Figs 7-8), Qsim (Fig 9), then the roofline table from
-the dry-run artifacts.
+the dry-run artifacts.  Every module writes its artifact through
+``benchmarks.common.save_result`` in the canonical ``repro.perf.report``
+schema (validate with ``python -m repro.perf --validate
+benchmarks/results``).
 """
 from __future__ import annotations
 
@@ -43,27 +47,50 @@ BENCHMARKS = [
 
 
 def main() -> None:
+    names = [n for n, _ in BENCHMARKS]
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None, metavar="NAME[,NAME...]",
+                    help="comma-separated exact benchmark names "
+                         "(see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print available benchmark names and exit")
     ap.add_argument("--no-measure", action="store_true")
     args = ap.parse_args()
 
-    failures = []
+    if args.list:
+        for n in names:
+            print(n)
+        return
+
+    selected = set(names)
+    if args.only:
+        only = [s.strip() for s in args.only.split(",") if s.strip()]
+        unknown = sorted(set(only) - set(names))
+        if unknown:
+            raise SystemExit(
+                f"unknown benchmarks {unknown}; available: {names}")
+        selected = set(only)
+
+    results = []                               # (name, wall_s, ok)
     for name, mod in BENCHMARKS:
-        if args.only and args.only not in name:
+        if name not in selected:
             continue
         print(f"\n{'=' * 72}\nrunning {name}\n{'=' * 72}")
         t0 = time.time()
         try:
             mod.run(measure=not args.no_measure)
-            print(f"[{name}] done in {time.time() - t0:.1f}s")
+            results.append((name, time.time() - t0, True))
+            print(f"[{name}] done in {results[-1][1]:.1f}s")
         except Exception as e:  # noqa: BLE001
-            failures.append(name)
+            results.append((name, time.time() - t0, False))
             print(f"[{name}] FAILED: {e}")
             traceback.print_exc()
+    print("\nsummary: " + " | ".join(
+        f"{n} {'OK' if ok else 'FAIL'} {w:.1f}s" for n, w, ok in results))
+    failures = [n for n, _, ok in results if not ok]
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
-    print("\nall benchmarks complete; JSON in benchmarks/results/")
+    print("all benchmarks complete; JSON in benchmarks/results/")
 
 
 if __name__ == "__main__":

@@ -14,15 +14,23 @@ band) the same request set runs through both engines:
 high-variance ``mixed_gens`` mix through every family's smallest config
 via the DecodeState protocol; without the flag the three classic mixes
 run on the lm config.  CPU wall timings on this class of box swing ±50%
-between processes, so each engine pair runs REPEATS interleaved passes
-and the JSON artifact reports the **median** wall/tok-per-s (plus every
-raw wall) — trust orderings and medians, never a single number.  Rows
-land in benchmarks/results/serve_bench.json.
+between processes, so both engines run REPEATS *interleaved* passes
+through ``repro.perf.measure`` (the continuous engine's reset/submit
+happen as untimed per-repeat setup — only the drain is timed) and the
+artifact reports the **median** wall/tok-per-s (plus every raw wall) —
+trust orderings and medians, never a single number.
+
+Each engine row also carries the analytic work executed (engine-stats
+``model_flops``/``model_bytes`` from core/costmodel via the engines'
+StepCostModel) and the derived ``roofline_utilization`` — the modeled
+bound time divided by the measured wall (``repro.perf.report.
+roofline_fraction``) — so per-family speedups are roofline-attributable,
+not just tokens/s.  Rows land in benchmarks/results/serve_bench.json in
+the canonical Report schema.
 """
 from __future__ import annotations
 
 import argparse
-import time
 from typing import Dict, List, Optional
 
 import jax
@@ -33,6 +41,8 @@ from benchmarks import common
 from repro.configs import reduced_config
 from repro.models import build_model
 from repro.models.decode_state import stub_context
+from repro.perf.measure import measure as perf_measure
+from repro.perf.report import roofline_fraction
 from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
 
 ARCH = "granite-3-2b"
@@ -65,8 +75,10 @@ def _workload(rng, n, p_band, g_band, vocab):
 
 
 def _static_pass(engine, reqs, slots, pad_to, extra=None):
+    """One full static pass; returns (generated, model_flops, model_bytes).
+    Wall timing happens in the caller via repro.perf.measure."""
+    f0, b0 = engine.stats.model_flops, engine.stats.model_bytes
     generated = 0
-    t0 = time.perf_counter()
     for w0 in range(0, len(reqs), slots):
         wave = reqs[w0:w0 + slots]
         while len(wave) < slots:                 # ragged tail wave: pad rows
@@ -79,25 +91,21 @@ def _static_pass(engine, reqs, slots, pad_to, extra=None):
                               extra=extra)
         jax.block_until_ready(out)
         generated += sum(g for _, g in reqs[w0:w0 + slots])
-    return generated, time.perf_counter() - t0
-
-
-def _continuous_pass(engine, reqs, extra=None):
-    engine.reset()
-    for prompt, glen in reqs:
-        engine.submit(prompt, glen, extra=extra)
-    t0 = time.perf_counter()
-    engine.run()
-    return engine.stats.summary(), time.perf_counter() - t0
+    return generated, engine.stats.model_flops - f0, \
+        engine.stats.model_bytes - b0
 
 
 def _run_pair(model, params, reqs, slots, max_len, *,
               page_size=8, prefill_chunk=32):
-    """Time both engines on the same workload, interleaved (static pass,
-    continuous pass, static pass, ...) so CPU-noise hits both alike;
-    the REPEATS walls are medianed per engine."""
-    cfg = model.cfg
+    """Time both engines on the same workload through repro.perf.measure:
+    the passes run as interleaved contenders (static, continuous, static,
+    ...) so CPU noise hits both alike; the REPEATS walls are medianed per
+    engine.  The continuous engine's reset + submit runs as the
+    contender's untimed per-repeat ``setup`` — only ``run()`` (the drain)
+    is inside the timed region, matching the static engine whose timed
+    region is likewise pure serving work."""
     rng = np.random.default_rng(11)
+    cfg = model.cfg
     extra_b = stub_context(cfg, rng, batch=slots)
     extra_1 = (None if extra_b is None
                else {k: v[0] for k, v in extra_b.items()})
@@ -115,27 +123,38 @@ def _run_pair(model, params, reqs, slots, max_len, *,
     cont.submit(np.ones(prefill_chunk + 2, np.int32), 3, extra=extra_1)
     cont.run()                                   # warm both step widths
 
-    st_walls, ct_walls = [], []
-    generated, ct_summary = 0, None
-    for _ in range(REPEATS):
-        generated, wall = _static_pass(static, reqs, slots, pad_to,
-                                       extra=extra_b)
-        st_walls.append(wall)
-        ct_summary, wall = _continuous_pass(cont, reqs, extra=extra_1)
-        ct_walls.append(wall)
+    def _cont_setup():
+        cont.reset()
+        for prompt, glen in reqs:
+            cont.submit(prompt, glen, extra=extra_1)
 
-    st_med = float(np.median(st_walls))
-    ct_med = float(np.median(ct_walls))
-    st = {"tok_per_s": generated / st_med, "wall_s_median": st_med,
-          "wall_s_all": [round(w, 4) for w in st_walls],
-          "generated_tokens": generated}
-    ct = {"tok_per_s": ct_summary["generated_tokens"] / ct_med,
-          "wall_s_median": ct_med,
-          "wall_s_all": [round(w, 4) for w in ct_walls],
+    m = perf_measure(
+        lambda: _static_pass(static, reqs, slots, pad_to, extra=extra_b),
+        reps=REPEATS, warmup=0, jit=False,
+        interleave_with={"continuous": (cont.run, (), _cont_setup)})
+    mc = m.interleaved["continuous"]
+
+    generated, st_flops, st_bytes = m.result     # per-pass deltas
+    ct_summary = cont.stats.summary()            # last pass (reset per rep)
+    st = {"tok_per_s": generated / m.median_s,
+          "wall_s_median": m.median_s,
+          "wall_s_all": [round(w, 4) for w in m.all_s],
+          "generated_tokens": generated,
+          "model_flops": st_flops, "model_bytes": st_bytes,
+          "roofline_utilization": roofline_fraction(
+              st_flops, st_bytes, m.median_s)}
+    ct = {"tok_per_s": ct_summary["generated_tokens"] / mc.median_s,
+          "wall_s_median": mc.median_s,
+          "wall_s_all": [round(w, 4) for w in mc.all_s],
           "generated_tokens": ct_summary["generated_tokens"],
           "step_ms_p50": ct_summary["step_ms_p50"],
           "step_ms_p95": ct_summary["step_ms_p95"],
-          "mean_occupancy": ct_summary["mean_occupancy"]}
+          "mean_occupancy": ct_summary["mean_occupancy"],
+          "model_flops": ct_summary["model_flops"],
+          "model_bytes": ct_summary["model_bytes"],
+          "roofline_utilization": roofline_fraction(
+              ct_summary["model_flops"], ct_summary["model_bytes"],
+              mc.median_s)}
     return st, ct
 
 
@@ -186,8 +205,13 @@ def run(measure: bool = True,
         "serving throughput: continuous batching vs static (reduced, "
         "median of interleaved repeats)", rows,
         ["family", "mix", "engine", "generated_tokens", "tok_per_s",
-         "speedup_vs_static", "mean_occupancy"],
-        widths={"family": 7, "mix": 14, "engine": 11})
+         "speedup_vs_static", "mean_occupancy", "roofline_utilization"],
+        widths={"family": 7, "mix": 14, "engine": 11,
+                "roofline_utilization": 21})
+    print("-> roofline_utilization = modeled bound time (costmodel flops/"
+          "bytes vs the TPU-v5e ceiling) / measured host wall; absolute "
+          "values are small on this host — compare across families and "
+          "engines, not against 1.0.")
     return rows
 
 

@@ -6,12 +6,12 @@
       PYTHONPATH=src python examples/qsim_demo.py --distributed
 """
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.perf.measure import measure
 from repro.quantum import gates, qsim
 
 
@@ -40,15 +40,12 @@ def main():
          jax.jit(lambda r, i: qsim.run_kernel_planar(r, i, circuit)),
          (re, im)),
     ]:
-        out = fn(*fargs)
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        out = fn(*fargs)
-        jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
+        m = measure(fn, *fargs, reps=1, jit=False)
+        out = m.result
         flat = np.asarray(out[0]) if isinstance(out, tuple) else \
             np.asarray(out)[..., 0]
-        print(f"{name:28s} {dt*1e3:9.2f} ms  |amp0|={abs(flat.reshape(-1)[0]):.4f}")
+        print(f"{name:28s} {m.median_s*1e3:9.2f} ms  "
+              f"|amp0|={abs(flat.reshape(-1)[0]):.4f}")
 
     if args.distributed:
         from jax.sharding import NamedSharding, PartitionSpec as P

@@ -10,7 +10,6 @@ install: each request carries its own image / audio context.
   PYTHONPATH=src python examples/serve_decode.py --arch whisper-base
 """
 import argparse
-import time
 
 import jax
 import numpy as np
@@ -18,6 +17,7 @@ import numpy as np
 from repro.configs import ARCH_IDS, reduced_config
 from repro.models import build_model
 from repro.models.decode_state import stub_context
+from repro.perf.measure import now
 from repro.serve import ContinuousBatchingEngine
 
 
@@ -52,9 +52,9 @@ def main():
         rids.append((rid, plen, glen))
         print(f"submit rid={rid} prompt_len={plen} gen_len={glen}")
 
-    t0 = time.perf_counter()
+    t0 = now()
     results = engine.run()
-    wall = time.perf_counter() - t0
+    wall = now() - t0
 
     for req in engine.requests():
         print(f"rid={req.rid} slot-admitted@step {req.admit_step:3d} "

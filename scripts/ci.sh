@@ -1,15 +1,40 @@
 #!/usr/bin/env bash
-# Fast PR gate: the tier1 subset — compat shims + serving subsystem,
-# including the per-family continuous-vs-static parity smoke tests
-# (tests/test_serve_families.py: one smallest config per family, all
-# five of lm/ssm/hybrid/vlm/audio) — runs in under 2 minutes; the full
-# suite (incl. 10+ min model smoke tests) stays on the nightly path:
+# Fast PR gate: the tier1 subset — compat shims + perf API + serving
+# subsystem, including the per-family continuous-vs-static parity smoke
+# tests (tests/test_serve_families.py: one smallest config per family,
+# all five of lm/ssm/hybrid/vlm/audio) — runs in under 2 minutes; the
+# full suite (incl. 10+ min model smoke tests) stays on the nightly path:
 #
-#   scripts/ci.sh               # tier1 only
-#   scripts/ci.sh --full        # entire suite
+#   scripts/ci.sh                 # tier1 only
+#   scripts/ci.sh --full          # entire suite
+#   scripts/ci.sh --bench-smoke   # tiny-shape benchmark run + validate
+#                                 # every benchmarks/results/*.json
+#                                 # against the repro.perf.report schema
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--bench-smoke" ]]; then
+    shift
+    # benchmarks/results/ is gitignored, regenerable scratch: prune any
+    # pre-schema artifacts left by older checkouts so the gate only judges
+    # what current writers produce
+    python - <<'PY'
+import json
+import pathlib
+for p in pathlib.Path("benchmarks/results").glob("*.json"):
+    try:
+        legacy = json.loads(p.read_text()).get("schema") != "repro.perf.report"
+    except (OSError, json.JSONDecodeError):
+        legacy = True
+    if legacy:
+        print(f"[bench-smoke] pruning legacy artifact {p}")
+        p.unlink()
+PY
+    REPRO_BENCH_SMOKE=1 python -m benchmarks.run --only table1_counters
+    python -m repro.perf --validate benchmarks/results
+    exit 0
+fi
 
 if [[ "${1:-}" == "--full" ]]; then
     shift

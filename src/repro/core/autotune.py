@@ -9,8 +9,10 @@ TPU analogue trades VMEM tile size against:
 
 ``select_multiplier`` is a pure cost-model decision (no hardware needed):
 for each multiplier it computes the working set from the kernel's block
-shapes and predicts the bound term; benchmarks/fig7 then sweeps the real
-(host-measured) kernels to validate that "default ≈ optimal" transfers.
+shapes and predicts the bound term; ``measured_sweep`` is the validation
+half — it times real candidate callables through ``repro.perf.measure``
+(interleaved repeats, medians) so benchmarks/fig7 can check that
+"default ≈ optimal" transfers to this host.
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ from typing import Callable, Dict, List, Tuple
 
 from repro.core.costmodel import TPU_V5E, HWSpec
 from repro.kernels.common import MXU, SUBLANE, VALID_MULTIPLIERS
+from repro.perf.measure import measure_group
 
 
 @dataclasses.dataclass
@@ -66,6 +69,18 @@ def select_multiplier(ks: KernelShape,
     reports = [predict(ks, m, hw) for m in VALID_MULTIPLIERS]
     best = min(reports, key=lambda r: r.predicted_s)
     return best.multiplier, reports
+
+
+def measured_sweep(candidates: Dict[str, Tuple[Callable, tuple]],
+                   reps: int = 3) -> Dict[str, float]:
+    """Host-measured validation sweep over block-knob candidates.
+
+    ``candidates`` maps a label (e.g. a kv-chunk size) to ``(fn, args)``;
+    all candidates are timed in the same interleaved rounds and the
+    returned dict carries each label's median wall seconds.
+    """
+    return {name: m.median_s
+            for name, m in measure_group(candidates, reps=reps).items()}
 
 
 # -- footprint builders for the shipped kernels -----------------------------

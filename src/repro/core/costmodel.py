@@ -97,10 +97,15 @@ def _cross_attn_flops(cfg: ModelConfig, T: int, T_ctx: int) -> float:
 def forward_flops(cfg: ModelConfig, batch: int, seq: int,
                   opts: ImplOpts = ImplOpts(),
                   kv_len: Optional[int] = None,
-                  decode: bool = False) -> Dict[str, float]:
+                  decode: bool = False,
+                  include_encoder: bool = True) -> Dict[str, float]:
     """FLOPs of one forward pass over (batch, seq) tokens.
 
     decode=True: attention reads a KV cache of ``kv_len`` (no S^2 term).
+    include_encoder=False drops the enc-dec audio-encoder stack — for
+    *per-decoded-token* costing, where the encoder runs once per request
+    at admission (serve install_context), not once per token; the decode
+    cross-attention reads of the cached encoder K/V are still counted.
     """
     T = float(batch * seq)
     comp: Dict[str, float] = {"attn_proj": 0, "attn_score": 0, "mlp": 0,
@@ -129,12 +134,13 @@ def forward_flops(cfg: ModelConfig, batch: int, seq: int,
                 comp["mlp"] += _mlp_flops(cfg, T)
 
     if cfg.is_encdec:
-        T_enc = float(batch * cfg.n_audio_ctx)
-        for _ in range(cfg.n_encoder_layers):
-            comp["attn_proj"] += _attn_proj_flops(cfg, T_enc)
-            comp["attn_score"] += _attn_score_flops(
-                cfg, T_enc, float(cfg.n_audio_ctx), 1.0)
-            comp["mlp"] += _mlp_flops(cfg, T_enc)
+        if include_encoder:
+            T_enc = float(batch * cfg.n_audio_ctx)
+            for _ in range(cfg.n_encoder_layers):
+                comp["attn_proj"] += _attn_proj_flops(cfg, T_enc)
+                comp["attn_score"] += _attn_score_flops(
+                    cfg, T_enc, float(cfg.n_audio_ctx), 1.0)
+                comp["mlp"] += _mlp_flops(cfg, T_enc)
         if not decode:
             for i in range(cfg.n_layers):
                 comp["cross"] += _cross_attn_flops(cfg, T, cfg.n_audio_ctx)

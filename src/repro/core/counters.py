@@ -1,9 +1,17 @@
-"""Performance-counter calibration — the paper's Table-1 methodology
-applied to XLA's cost channels.
+"""Performance-counter calibration programs — the paper's Table-1
+methodology applied to XLA's cost channels.
 
-The paper runs hand-written assembly with *known* instruction counts and
-classifies each perf event reliable/unreliable (5% tolerance).  Here the
-"counters" are the channels the roofline consumes:
+This module is the *low-level calibration pass* behind the ``repro.perf``
+measurement API: it runs programs with analytically-known counts and
+classifies each channel reliable/unreliable at the paper's 5% tolerance.
+Consumers should not read these verdicts directly — go through
+``repro.perf.channels`` (``calibrate()`` / ``channels_for()``), which
+caches a calibration and gates every counter read on it, substituting the
+analytic ``core/costmodel.py`` value (``source="model"``) when a channel
+is unreliable — exactly the paper's treatment of its broken "vector ins"
+event.
+
+The calibrated channels (the ones the roofline consumes):
 
   flops_straightline   cost_analysis()['flops'] on unrolled programs
   flops_scan           the same op under lax.scan (trip-count blindness)
@@ -15,9 +23,6 @@ classifies each perf event reliable/unreliable (5% tolerance).  Here the
   transcendental       'transcendentals' on an exp loop
 
 Each record: (channel, reference value, measured, error, reliable@5%).
-Unreliable channels are excluded from the roofline (core/costmodel.py uses
-the analytic model instead) — exactly the paper's treatment of its broken
-"vector ins" event.
 """
 from __future__ import annotations
 

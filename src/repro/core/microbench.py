@@ -9,20 +9,23 @@ On this CPU-hosted target we report two columns per benchmark:
   * ``host_gops``       — real measured throughput of the XLA:CPU-compiled
     jnp equivalent (the paper's measured column, on the host ISA).
 
+All host timing goes through ``repro.perf.measure`` (the repo's single
+warm-up + block_until_ready + median-of-repeats implementation); rows are
+persisted via the ``repro.perf.report`` schema by benchmarks/fig4_arith.
+
 Arithmetic rows: add/mul/fma/div/exp x {f32, bf16, i32, i8}.
 Memory rows: unit-stride copy/triad, strided (2..8), masked-vs-exact tail.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.costmodel import TPU_V5E, HWSpec
+from repro.perf.measure import measure as _measure
 
 
 @dataclasses.dataclass
@@ -52,17 +55,6 @@ def _model_ceiling(flops_per_elem, bytes_per_elem, dtype,
     mem_gops = hw.hbm_bw / max(bytes_per_elem, 1e-9) / 1e9
     # ops here = elements processed per second
     return min(compute_gops * max(flops_per_elem, 1), mem_gops)
-
-
-def _time_host(fn: Callable, *args, iters: int = 5) -> float:
-    jfn = jax.jit(fn)
-    out = jfn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jfn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
 
 
 _DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
@@ -95,8 +87,7 @@ def arithmetic_suite(n: int = 1 << 20, measure: bool = True
                 bytes_per_elem=bytes_pe,
                 model_tpu_gops=_model_ceiling(flops, bytes_pe, dname))
             if measure:
-                t = _time_host(fn, x, y)
-                rec.host_gops = n * flops / t / 1e9
+                rec.host_gops = _measure(fn, x, y, reps=5).gops(n * flops)
             recs.append(rec)
     return recs
 
@@ -118,8 +109,7 @@ def memory_suite(rows: int = 1 << 13, measure: bool = True
                           model_tpu_gops=TPU_V5E.hbm_bw / bytes_pe / 1e9,
                           note=note)
         if measure:
-            t = _time_host(fn, *args)
-            rec.host_gops = out_elems / t / 1e9
+            rec.host_gops = _measure(fn, *args, reps=5).gops(out_elems)
         recs.append(rec)
 
     add_rec("vle (unit-stride copy)", lambda x: x + 0, (x,), n, 8)

@@ -11,22 +11,26 @@ Version mapping (DESIGN.md §2):
              kernel column reports the TPU cost-model time; the measured
              host comparison is scalar-vs-autovec (both native XLA:CPU).
 
-Per version we record: host wall time, cost_analysis flops/bytes, the HLO
-op histogram ("retired instructions"), and the instruction-reduction ratio
+Per version we record: host wall time (via ``repro.perf.measure`` —
+scalar and autovec are timed in *interleaved* repeats so cross-process
+CPU noise hits both alike), the calibration-gated cost channels
+(``repro.perf.channels``: an unreliable flops counter is replaced by the
+app's analytic useful-flops value, tagged ``source="model"``), the HLO op
+histogram ("retired instructions"), and the instruction-reduction ratio
 vs scalar — the paper's Fig-5b predictor.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import compat, hlo as hlo_lib
 from repro.core.costmodel import TPU_V5E
+from repro.perf import channels as perf_channels
+from repro.perf.measure import measure_group
 
 
 @dataclasses.dataclass
@@ -235,45 +239,49 @@ BUILDERS: Dict[str, Callable[[], ProxyApp]] = {
 # ---------------------------------------------------------------------------
 # measurement
 # ---------------------------------------------------------------------------
-def _measure(fn, args, iters=3) -> float:
-    jfn = jax.jit(fn)
-    out = jfn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = jfn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters
-
-
 def evaluate_app(app: ProxyApp, measure: bool = True,
                  skip_kernel_timing: bool = True) -> List[Dict]:
+    # one interleaved timing pass over the timeable versions (scalar,
+    # autovec, ... — the Pallas kernel only runs in interpret mode on the
+    # host, so its wall time is not comparable and stays untimed)
+    walls: Dict[str, float] = {}
+    if measure:
+        walls = {name: m.median_s for name, m in measure_group(
+            {v.name: (v.fn, v.args) for v in app.versions
+             if not (v.name == "kernel" and skip_kernel_timing)},
+            reps=3).items()}
+
+    cal = perf_channels.default_calibration()
     rows = []
     base_ops = None
     for v in app.versions:
-        compiled = jax.jit(v.fn).lower(*v.args).compile()
-        cost = compat.cost_dict(compiled)
-        rep = hlo_lib.analyze_hlo(compiled.as_text())
-        total_ops = sum(rep.op_histogram.values())
+        ch = perf_channels.channels_for(
+            v.fn, *v.args, model_flops=app.flops,
+            model_bytes=app.bytes_moved, calibration=cal)
+        total_ops = ch.total_ops
         if v.name == "scalar":
             base_ops = max(total_ops, 1)
-        t = None
-        if measure and not (v.name == "kernel" and skip_kernel_timing):
-            t = _measure(v.fn, v.args)
         rows.append({
             "app": app.name, "version": v.name,
-            "host_seconds": t,
+            "host_seconds": walls.get(v.name),
             "tpu_model_seconds": v.tpu_model_s,
-            "flops_counter": cost.get("flops", -1.0),
-            "bytes_counter": cost.get("bytes accessed", -1.0),
+            "flops": ch.flops.value,
+            "flops_source": ch.flops.source,
+            "bytes": ch.bytes_accessed.value,
+            "bytes_source": ch.bytes_accessed.source,
             "hlo_ops": total_ops,
-            "instruction_classes": hlo_lib.instruction_classes(
-                rep.op_histogram),
+            "instruction_classes": ch.instruction_classes,
             "op_reduction_vs_scalar": (base_ops / max(total_ops, 1)
                                        if base_ops else None),
             "useful_flops": app.flops,
         })
     return rows
+
+
+def channel_verdicts() -> Dict[str, bool]:
+    """The calibration verdicts the rows above were read under (for the
+    Report's ``reliability`` block)."""
+    return dict(perf_channels.default_calibration().verdicts)
 
 
 def run_all(measure: bool = True, apps: Optional[List[str]] = None

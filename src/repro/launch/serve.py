@@ -10,7 +10,6 @@ fixed-batch StaticBatchEngine baseline instead.
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +19,7 @@ from repro.configs import ARCH_IDS, get_config, reduced_config
 from repro.models import build_model
 from repro.models.decode_state import stub_context
 from repro.models.quant import quantize_params
+from repro.perf.measure import now
 from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
 
 
@@ -64,10 +64,10 @@ def main():
         extra = stub_context(cfg, rng, batch=args.slots)
         if extra is not None:
             extra = {k: jnp.asarray(v) for k, v in extra.items()}
-        t0 = time.perf_counter()
+        t0 = now()
         out = engine.generate(prompt, n_steps=args.gen_len, extra=extra)
         jax.block_until_ready(out)
-        dt = time.perf_counter() - t0
+        dt = now() - t0
         print(f"[serve] {args.arch} batch={args.slots}: "
               f"{args.gen_len * args.slots / dt:.1f} tok/s aggregate "
               f"(incl. compile); sample: {out[0, :12].tolist()}")
@@ -85,9 +85,9 @@ def main():
         engine.submit(prompt, args.gen_len,
                       temperature=args.temperature,
                       extra=stub_context(cfg, rng))
-    t0 = time.perf_counter()
+    t0 = now()
     engine.run()
-    dt = time.perf_counter() - t0
+    dt = now() - t0
     s = engine.stats.summary()
     print(f"[serve] {args.arch} ({cfg.family}) slots={args.slots} "
           f"requests={n_req}: "

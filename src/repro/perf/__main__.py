@@ -1,0 +1,8 @@
+"""CLI entry point: validate Report JSONs.
+
+    PYTHONPATH=src python -m repro.perf --validate benchmarks/results
+"""
+from repro.perf.report import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,160 @@
+"""Counter channels with calibration-gated reads.
+
+``channels_for(fn, *args)`` compiles the function once and extracts every
+cost channel the roofline consumes — ``cost_analysis()`` flops / bytes /
+transcendentals plus the HLO op histogram — then stamps each scalar
+channel with the reliability verdict from a Table-1 calibration pass
+(``repro.core.counters`` runs the known-count programs; this module owns
+the verdicts and the gating).  The gate acts *at read time*: when a
+channel's verdict is unreliable and the caller supplied an analytic value
+(``model_flops=`` / ``model_bytes=`` from ``core.costmodel``), the
+returned :class:`ChannelValue` carries that value with
+``source="model"`` — the paper's treatment of its broken "vector ins"
+event — instead of a silently-wrong counter.
+
+Which verdict applies to the flops read depends on the compiled program:
+a module with ``while`` bodies (``lax.scan``) is judged by the
+``flops_scan`` channel (trip-count blindness), a straight-line module by
+``flops_straightline``.  Bytes reads require both bytes channels to have
+calibrated reliable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+
+from repro.core import counters, hlo as hlo_lib
+from repro.core.compat import cost_dict
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelValue:
+    """One gated channel read.
+
+    ``source`` records where ``value`` came from: ``"counter"`` (the XLA
+    channel, trusted), ``"model"`` (analytic substitute for an unreliable
+    counter), or ``"none"`` (no counter and no model — value is 0).
+    ``reliable`` is the calibration verdict of the *counter* channel,
+    regardless of the substitution.
+    """
+
+    name: str
+    value: float
+    source: str
+    reliable: bool
+    counter_value: Optional[float] = None   # the raw counter when gated out
+
+    def row(self) -> Dict[str, Any]:
+        return {self.name: self.value,
+                f"{self.name}_source": self.source,
+                f"{self.name}_reliable": self.reliable}
+
+
+@dataclasses.dataclass
+class Calibration:
+    """Records + per-channel verdicts of one Table-1 calibration pass."""
+
+    records: List[counters.CounterRecord]
+    verdicts: Dict[str, bool]
+
+    def rows(self) -> List[Dict]:
+        return [r.row() for r in self.records]
+
+
+def calibrate(n: int = 1 << 16, steps: int = 8) -> Calibration:
+    """Run the known-count calibration programs and classify channels."""
+    recs = counters.calibrate(n=n, steps=steps)
+    return Calibration(records=recs, verdicts=counters.summarize(recs))
+
+
+@functools.lru_cache(maxsize=1)
+def default_calibration() -> Calibration:
+    """Process-wide cached calibration on reduced shapes.
+
+    The verdicts are shape-independent (they classify counter *mechanisms*,
+    not magnitudes), so the small programs give the same reliable/
+    unreliable split as the full Table-1 run at a fraction of the compile
+    time.
+    """
+    return calibrate(n=1 << 12, steps=4)
+
+
+def _gate(name: str, counter_value: Optional[float], reliable: bool,
+          model_value: Optional[float]) -> ChannelValue:
+    if reliable and counter_value is not None:
+        return ChannelValue(name, float(counter_value), "counter", True)
+    if model_value is not None:
+        return ChannelValue(name, float(model_value), "model", reliable,
+                            counter_value=counter_value)
+    if counter_value is not None:
+        # unreliable counter with no analytic substitute: hand it out, but
+        # flagged — callers must not feed it to the roofline
+        return ChannelValue(name, float(counter_value), "counter", False)
+    return ChannelValue(name, 0.0, "none", False)
+
+
+@dataclasses.dataclass
+class Channels:
+    """Every cost channel of one compiled function, verdict-stamped."""
+
+    flops: ChannelValue
+    bytes_accessed: ChannelValue
+    transcendentals: ChannelValue
+    op_histogram: Dict[str, int]
+    instruction_classes: Dict[str, int]
+    while_bodies: int
+    verdicts: Dict[str, bool]
+
+    @property
+    def total_ops(self) -> int:
+        return sum(self.op_histogram.values())
+
+    def row(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {}
+        for ch in (self.flops, self.bytes_accessed, self.transcendentals):
+            out.update(ch.row())
+        out["hlo_ops"] = self.total_ops
+        out["instruction_classes"] = self.instruction_classes
+        return out
+
+
+def channels_for(fn, *args,
+                 model_flops: Optional[float] = None,
+                 model_bytes: Optional[float] = None,
+                 model_transcendentals: Optional[float] = None,
+                 calibration: Optional[Calibration] = None,
+                 compiled=None) -> Channels:
+    """Extract the verdict-gated channel bundle for ``fn(*args)``.
+
+    ``compiled`` short-circuits compilation when the caller already holds
+    a ``Compiled`` (e.g. it also wants the executable).  The model values
+    are the analytic substitutes used when the matching counter channel
+    calibrated unreliable.
+    """
+    cal = calibration if calibration is not None else default_calibration()
+    comp = compiled if compiled is not None else (
+        jax.jit(fn).lower(*args).compile())
+    cost = cost_dict(comp)
+    rep = hlo_lib.analyze_hlo(comp.as_text())
+
+    looped = rep.while_bodies > 0
+    flops_verdict = cal.verdicts.get(
+        "flops_scan" if looped else "flops_straightline", False)
+    bytes_verdict = (cal.verdicts.get("bytes_copy", False)
+                     and cal.verdicts.get("bytes_fused_chain", False))
+    trans_verdict = cal.verdicts.get("transcendental", False)
+
+    return Channels(
+        flops=_gate("flops", cost.get("flops"), flops_verdict, model_flops),
+        bytes_accessed=_gate("bytes_accessed", cost.get("bytes accessed"),
+                             bytes_verdict, model_bytes),
+        transcendentals=_gate("transcendentals", cost.get("transcendentals"),
+                              trans_verdict, model_transcendentals),
+        op_histogram=rep.op_histogram,
+        instruction_classes=hlo_lib.instruction_classes(rep.op_histogram),
+        while_bodies=rep.while_bodies,
+        verdicts=dict(cal.verdicts),
+    )

@@ -1,0 +1,155 @@
+"""The one wall-clock timing implementation.
+
+``measure(fn, *args)`` is the only place in the tree that calls
+``time.perf_counter`` in a loop: jit (optional) → warm-up with
+``block_until_ready`` → ``reps`` timed repeats.  Rivals passed via
+``interleave_with`` are timed in the same round-robin rounds (A, B, C,
+A, B, C, ...) so a cross-process CPU-noise burst hits every contender
+alike; per-contender medians are then comparable even when single walls
+swing ±50% (see CHANGES PR 1).  Callers that need a raw timestamp for
+instrumentation (serve engine per-step records, the trainer's straggler
+watchdog) use ``now()`` instead of importing ``time`` themselves, so
+`grep perf_counter` finds exactly one timing implementation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+
+def now() -> float:
+    """Monotonic wall-clock timestamp (seconds).
+
+    The sanctioned clock for instrumentation call sites that bracket work
+    themselves (engine step records, straggler EWMAs).  Benchmark-style
+    repeat timing must use :func:`measure` instead.
+    """
+    return time.perf_counter()
+
+
+@dataclasses.dataclass
+class Measurement:
+    """Walls of one timed contender; medians are the trusted statistic."""
+
+    median_s: float
+    mean_s: float
+    all_s: List[float]
+    reps: int
+    result: Any = None               # the last repeat's output
+    interleaved: Dict[str, "Measurement"] = dataclasses.field(
+        default_factory=dict)
+
+    def per_second(self, n: float) -> float:
+        """Rate of ``n`` somethings (ops, elements, tokens) per second."""
+        return n / self.median_s if self.median_s > 0 else 0.0
+
+    def gops(self, n_ops: float) -> float:
+        return self.per_second(n_ops) / 1e9
+
+    def row(self) -> Dict[str, Any]:
+        return {"median_s": self.median_s, "mean_s": self.mean_s,
+                "reps": self.reps,
+                "all_s": [round(w, 6) for w in self.all_s]}
+
+
+# a contender: (fn, args, per-repeat untimed setup or None)
+_Candidate = Tuple[Callable, tuple, Optional[Callable]]
+
+
+def _normalize(spec) -> _Candidate:
+    if callable(spec):
+        return spec, (), None
+    fn, args = spec[0], tuple(spec[1])
+    setup = spec[2] if len(spec) > 2 else None
+    return fn, args, setup
+
+
+def measure(fn: Callable, *args,
+            reps: int = 5,
+            warmup: int = 1,
+            jit: bool = True,
+            setup: Optional[Callable] = None,
+            interleave_with: Optional[Dict[str, Any]] = None,
+            ) -> Measurement:
+    """Time ``fn(*args)`` — and optionally rivals — interleaved.
+
+    Args:
+      fn, *args: the primary contender.  With ``jit=True`` (default) the
+        callable is wrapped in ``jax.jit``; pass ``jit=False`` for
+        host-level thunks (e.g. a whole serving pass) or pre-jitted fns.
+      reps: timed repeats; the reported statistic is the median.
+      warmup: untimed calls before the clock starts (compilation +
+        first-touch); each warm-up output is blocked on.
+      setup: optional thunk run *untimed* before every repeat (and before
+        every warm-up) — state resets, queue refills; keeps per-repeat
+        preparation out of the timed region.
+      interleave_with: ``{name: (fn, args)}``, ``{name: (fn, args,
+        setup)}`` or ``{name: thunk}`` rivals timed in the same rounds.
+        Their measurements land in ``Measurement.interleaved[name]``.
+
+    Every timed call is bracketed by ``block_until_ready`` on its output,
+    so async dispatch never leaks out of the timed region.
+    """
+    contenders: Dict[str, _Candidate] = {
+        "__self__": (fn, tuple(args), setup)}
+    for name, spec in (interleave_with or {}).items():
+        contenders[name] = _normalize(spec)
+
+    prepared: Dict[str, Callable] = {}
+    for name, (f, a, prep) in contenders.items():
+        jf = jax.jit(f) if jit else f
+        for _ in range(warmup):
+            if prep is not None:
+                prep()
+            jax.block_until_ready(jf(*a))
+        prepared[name] = jf
+
+    walls: Dict[str, List[float]] = {name: [] for name in contenders}
+    results: Dict[str, Any] = {}
+    for _ in range(max(1, reps)):
+        for name, (_, a, prep) in contenders.items():
+            if prep is not None:
+                prep()
+            t0 = time.perf_counter()
+            out = prepared[name](*a)
+            jax.block_until_ready(out)
+            walls[name].append(time.perf_counter() - t0)
+            results[name] = out
+
+    def _mk(name: str) -> Measurement:
+        w = walls[name]
+        return Measurement(median_s=float(statistics.median(w)),
+                           mean_s=float(sum(w) / len(w)),
+                           all_s=w, reps=len(w), result=results[name])
+
+    m = _mk("__self__")
+    m.interleaved = {name: _mk(name) for name in contenders
+                     if name != "__self__"}
+    return m
+
+
+def measure_group(candidates: Dict[str, Any], *,
+                  reps: int = 5, warmup: int = 1, jit: bool = True
+                  ) -> Dict[str, Measurement]:
+    """Time every candidate in the same interleaved rounds.
+
+    The canonical all-contenders-equal entry point (sweeps, idiom
+    comparisons): ``{name: (fn, args)}`` (or ``{name: thunk}``) in, flat
+    ``{name: Measurement}`` out — no head/rival asymmetry to merge at the
+    call site.
+    """
+    names = list(candidates)
+    if not names:
+        return {}
+    head_fn, head_args, head_setup = _normalize(candidates[names[0]])
+    m = measure(head_fn, *head_args, reps=reps, warmup=warmup, jit=jit,
+                setup=head_setup,
+                interleave_with={n: candidates[n] for n in names[1:]})
+    out = {names[0]: m}
+    out.update(m.interleaved)
+    m.interleaved = {}
+    return out

@@ -1,0 +1,207 @@
+"""The canonical benchmark Report schema.
+
+Every artifact under ``benchmarks/results/*.json`` is one serialized
+:class:`Report`: benchmark name, rows, optional channel summary, the
+calibration reliability verdicts the rows were read under, the hardware
+ceiling the model columns refer to, and environment metadata — one
+machine-checkable shape for every figure/table plus the serve benchmark.
+
+``benchmarks/common.save_result`` writes it; this module validates it:
+
+    PYTHONPATH=src python -m repro.perf --validate benchmarks/results
+
+exits non-zero when any top-level JSON in the directory fails the schema
+(the ``scripts/ci.sh --bench-smoke`` gate).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+import sys
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.core.costmodel import TPU_V5E, HWSpec
+
+SCHEMA = "repro.perf.report"
+SCHEMA_VERSION = 1
+
+
+def environment_meta() -> Dict[str, Any]:
+    import platform
+
+    import jax
+
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+    }
+
+
+def hw_meta(hw: HWSpec = TPU_V5E) -> Dict[str, Any]:
+    return {"name": hw.name, "peak_flops_bf16": hw.peak_flops_bf16,
+            "hbm_bw": hw.hbm_bw, "ici_bw": hw.ici_bw}
+
+
+def roofline_fraction(flops: float, hbm_bytes: float, wall_s: float,
+                      hw: HWSpec = TPU_V5E) -> float:
+    """Fraction of the modeled roofline a measured run achieved.
+
+    ``max(flops/peak, bytes/bw)`` is the modeled bound time for the work;
+    dividing by the measured wall gives "how close to the modeled ceiling
+    this run came" (1.0 = at the roofline).  When the wall is a host-CPU
+    measurement against the TPU model the absolute value is small — trust
+    ratios across configurations, not the absolute number, exactly like
+    every other model-vs-host column in this repo.
+    """
+    if wall_s <= 0:
+        return 0.0
+    t_bound = max(flops / hw.peak_flops_bf16, hbm_bytes / hw.hbm_bw)
+    return t_bound / wall_s
+
+
+@dataclasses.dataclass
+class Report:
+    benchmark: str
+    rows: List[Dict[str, Any]]
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    reliability: Dict[str, bool] = dataclasses.field(default_factory=dict)
+    channels: Optional[Dict[str, Any]] = None
+    hw: Dict[str, Any] = dataclasses.field(default_factory=hw_meta)
+    environment: Dict[str, Any] = dataclasses.field(
+        default_factory=environment_meta)
+    created_unix: float = dataclasses.field(default_factory=time.time)
+
+    def to_payload(self) -> Dict[str, Any]:
+        return {
+            "schema": SCHEMA,
+            "schema_version": SCHEMA_VERSION,
+            "benchmark": self.benchmark,
+            "created_unix": self.created_unix,
+            "environment": self.environment,
+            "hw": self.hw,
+            "meta": self.meta,
+            "reliability": self.reliability,
+            "channels": self.channels,
+            "rows": self.rows,
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_payload(), indent=2, default=str)
+
+    @classmethod
+    def from_payload(cls, payload: Dict[str, Any]) -> "Report":
+        errors = validate(payload)
+        if errors:
+            raise ValueError(f"invalid Report payload: {errors}")
+        return cls(benchmark=payload["benchmark"], rows=payload["rows"],
+                   meta=payload["meta"], reliability=payload["reliability"],
+                   channels=payload.get("channels"), hw=payload["hw"],
+                   environment=payload["environment"],
+                   created_unix=payload["created_unix"])
+
+
+def make_report(benchmark: str, rows: List[Dict[str, Any]], *,
+                meta: Optional[Dict[str, Any]] = None,
+                reliability: Optional[Dict[str, bool]] = None,
+                channels: Optional[Dict[str, Any]] = None,
+                hw: HWSpec = TPU_V5E) -> Report:
+    return Report(benchmark=benchmark, rows=list(rows), meta=dict(meta or {}),
+                  reliability=dict(reliability or {}), channels=channels,
+                  hw=hw_meta(hw))
+
+
+_REQUIRED = {
+    "schema": str,
+    "schema_version": int,
+    "benchmark": str,
+    "created_unix": (int, float),
+    "environment": dict,
+    "hw": dict,
+    "meta": dict,
+    "reliability": dict,
+    "rows": list,
+}
+_HW_KEYS = ("name", "peak_flops_bf16", "hbm_bw")
+
+
+def validate(payload: Any) -> List[str]:
+    """Schema check; returns a list of error strings (empty = valid)."""
+    errors: List[str] = []
+    if not isinstance(payload, dict):
+        return [f"payload is {type(payload).__name__}, expected object"]
+    for key, typ in _REQUIRED.items():
+        if key not in payload:
+            errors.append(f"missing required key {key!r}")
+        elif not isinstance(payload[key], typ):
+            errors.append(
+                f"key {key!r} is {type(payload[key]).__name__}, "
+                f"expected {typ}")
+    if errors:
+        return errors
+    if payload["schema"] != SCHEMA:
+        errors.append(f"schema is {payload['schema']!r}, expected {SCHEMA!r}")
+    if payload["schema_version"] > SCHEMA_VERSION:
+        errors.append(
+            f"schema_version {payload['schema_version']} is newer than "
+            f"this reader ({SCHEMA_VERSION})")
+    for i, row in enumerate(payload["rows"]):
+        if not isinstance(row, dict):
+            errors.append(f"rows[{i}] is {type(row).__name__}, "
+                          "expected object")
+    for ch, verdict in payload["reliability"].items():
+        if not isinstance(verdict, bool):
+            errors.append(f"reliability[{ch!r}] is not a bool")
+    for key in _HW_KEYS:
+        if key not in payload["hw"]:
+            errors.append(f"hw missing key {key!r}")
+    ch = payload.get("channels")
+    if ch is not None and not isinstance(ch, dict):
+        errors.append(f"channels is {type(ch).__name__}, expected object")
+    return errors
+
+
+def validate_path(path: pathlib.Path) -> List[str]:
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable JSON: {e}"]
+    return validate(payload)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = [a for a in (argv if argv is not None else sys.argv[1:])
+            if a != "--validate"]
+    if not args:
+        print("usage: python -m repro.perf --validate "
+              "<file.json | results-dir> ...")
+        return 2
+    files: List[pathlib.Path] = []
+    for a in args:
+        p = pathlib.Path(a)
+        # directories: top-level JSONs only — nested dirs (e.g. the
+        # dry-run artifacts under results/dryrun/) are other formats
+        files.extend(sorted(p.glob("*.json")) if p.is_dir() else [p])
+    if not files:
+        print("no JSON files to validate")
+        return 1
+    n_bad = 0
+    for f in files:
+        errors = validate_path(f)
+        if errors:
+            n_bad += 1
+            print(f"FAIL {f}")
+            for e in errors:
+                print(f"  - {e}")
+        else:
+            print(f"ok   {f}")
+    print(f"{len(files) - n_bad}/{len(files)} reports valid")
+    return 1 if n_bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -33,15 +33,17 @@ functions used by the multi-pod dry-run and the SP-KV tests.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.shapes import ShapeSpec
+from repro.core import costmodel
 from repro.models import decode_state
 from repro.models.model import LM
+from repro.perf.measure import now
 from repro.serve import sampling  # noqa: F401  (submodule import, no cycle)
 from repro.serve.cache import PagedKVCache
 from repro.serve.scheduler import Request, Scheduler, StepPlan
@@ -88,15 +90,63 @@ class StepRecord:
     page_utilization: float
 
 
+class StepCostModel:
+    """Analytic per-step FLOPs/bytes (core/costmodel) for engine stats.
+
+    Decode rows are costed at a representative mid-stream cache length
+    (``max_len // 2``); prefill tokens at the per-token average of a full
+    ``max_len`` prefill.  These are *model* numbers (the calibrated
+    analytic implementation cost, not a counter) — they make serving
+    throughput roofline-attributable: benchmarks/serve_bench divides the
+    modeled bound time by the measured wall per family.
+    """
+
+    def __init__(self, cfg, max_len: int):
+        kv = max(1, max_len // 2)
+        # per-token decode cost excludes the enc-dec audio encoder: the
+        # engines run it once per request at admission (install_context),
+        # so it is amortized into the prefill per-token average instead
+        self.decode_flops_tok = costmodel.forward_flops(
+            cfg, 1, 1, kv_len=kv, decode=True,
+            include_encoder=False)["total"]
+        dec = costmodel.step_hbm_bytes(
+            cfg, ShapeSpec("serve_decode", kv, 1, "decode"))
+        self.decode_param_bytes = dec.get("params", 0.0)
+        self.decode_cache_bytes_row = dec.get("cache", 0.0)
+        S = max(1, max_len)
+        self.prefill_flops_tok = costmodel.forward_flops(cfg, 1, S)["total"] / S
+        self.prefill_bytes_tok = costmodel.step_hbm_bytes(
+            cfg, ShapeSpec("serve_prefill", S, 1, "prefill"))["total"] / S
+
+    def step_cost(self, n_decode: int, n_prefill_tokens: int
+                  ) -> tuple[float, float]:
+        flops = (n_decode * self.decode_flops_tok
+                 + n_prefill_tokens * self.prefill_flops_tok)
+        # params stream through HBM once per batched decode step, not once
+        # per row; per-row traffic is the row's own cache read
+        bytes_ = ((self.decode_param_bytes if n_decode else 0.0)
+                  + n_decode * self.decode_cache_bytes_row
+                  + n_prefill_tokens * self.prefill_bytes_tok)
+        return flops, bytes_
+
+
 @dataclasses.dataclass
 class EngineStats:
     steps: List[StepRecord] = dataclasses.field(default_factory=list)
     generated_tokens: int = 0
     wall_s: float = 0.0
+    # analytic (costmodel) work executed this run — the serve half of the
+    # repro.perf measurement surface: wall times come from perf.measure /
+    # per-step now() brackets, work comes from the model, and
+    # benchmarks/serve_bench derives roofline-relative utilization
+    model_flops: float = 0.0
+    model_bytes: float = 0.0
 
     def summary(self) -> Dict[str, float]:
         if not self.steps:
-            return {"steps": 0, "generated_tokens": 0, "tok_per_s": 0.0}
+            return {"steps": 0, "generated_tokens": 0, "tok_per_s": 0.0,
+                    "model_flops": self.model_flops,
+                    "model_bytes": self.model_bytes}
         walls = sorted(s.wall_s for s in self.steps)
 
         def pct(p):
@@ -113,6 +163,10 @@ class EngineStats:
                 [s.occupancy for s in self.steps])),
             "mean_page_utilization": float(np.mean(
                 [s.page_utilization for s in self.steps])),
+            "model_flops": self.model_flops,
+            "model_bytes": self.model_bytes,
+            "model_tflops_per_s": (self.model_flops / self.wall_s / 1e12
+                                   if self.wall_s else 0.0),
         }
 
 
@@ -188,6 +242,7 @@ class ContinuousBatchingEngine:
         self._pending_rows: Dict[int, int] = {}  # rid -> out row
         self._step_idx = 0
         self._seen_discarded = 0
+        self._cost = StepCostModel(model.cfg, max_len)
         self.stats = EngineStats()
         self._results: Dict[int, np.ndarray] = {}
 
@@ -313,7 +368,7 @@ class ContinuousBatchingEngine:
         plan = self.sched.next_plan(self._step_idx)
         if plan is None:
             return self.sched.has_work()
-        t0 = time.perf_counter()
+        t0 = now()
         for slot in np.nonzero(plan.reset_mask)[0]:
             # a request enters this slot: give it a fresh output row.  A
             # still-mapped old row can only be a preemption orphan —
@@ -355,6 +410,9 @@ class ContinuousBatchingEngine:
         sampled = (np.asarray(self._prev_sampled)
                    if self.sched.eos_id is not None else None)
         done = self.sched.commit(plan, sampled, self._step_idx)
+        fl, by = self._cost.step_cost(plan.n_decode, plan.n_prefill_tokens)
+        self.stats.model_flops += fl
+        self.stats.model_bytes += by
         for req in done:
             # tokens stay on device; materialized at the next flush point.
             # Row ownership moves from the slot to the pending map so the
@@ -362,7 +420,7 @@ class ContinuousBatchingEngine:
             self._pending.append(req)
             self._pending_rows[req.rid] = int(self._slot_row[req.finish_slot])
             self._slot_row[req.finish_slot] = -1
-        dt = time.perf_counter() - t0
+        dt = now() - t0
         self.stats.steps.append(StepRecord(
             wall_s=dt, n_decode=plan.n_decode,
             n_prefill_tokens=plan.n_prefill_tokens,
@@ -453,6 +511,10 @@ class StaticBatchEngine:
         self.prefill_fn = jax.jit(make_prefill_step(model))
         self.decode_fn = jax.jit(make_serve_step(
             model, sample_temperature=sample_temperature))
+        self._cost = StepCostModel(model.cfg, max_len)
+        # work accounting only (generated_tokens + model flops/bytes):
+        # the static engine is timed externally, so no per-step walls
+        self.stats = EngineStats()
 
     def generate(self, prompt_tokens, n_steps: int, extra=None):
         B, S = prompt_tokens.shape
@@ -467,4 +529,9 @@ class StaticBatchEngine:
             nxt, cache = self.decode_fn(self.params, cache, nxt[:, None],
                                         pos, extra)
             out.append(nxt)
+        fl, by = self._cost.step_cost(0, B * S)              # prefill
+        dfl, dby = self._cost.step_cost(B, 0)                # one decode step
+        self.stats.model_flops += fl + (n_steps - 1) * dfl
+        self.stats.model_bytes += by + (n_steps - 1) * dby
+        self.stats.generated_tokens += B * n_steps
         return jnp.stack(out, axis=1)                      # (B, n_steps)

@@ -13,7 +13,6 @@ Features required at 1000-node scale, exercised here on CPU:
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -21,6 +20,7 @@ import numpy as np
 
 from repro.checkpoint import Checkpointer
 from repro.data import SyntheticLMStream
+from repro.perf.measure import now
 
 
 class SimulatedFailure(RuntimeError):
@@ -66,10 +66,10 @@ class Trainer:
                     step == self.tcfg.fail_at_step:
                 raise SimulatedFailure(f"injected failure at step {step}")
             batch = self.stream.batch_for_step(step)
-            t0 = time.perf_counter()
+            t0 = now()
             state, metrics = self.train_step(state, batch)
             jax.block_until_ready(metrics["loss"])
-            dt = time.perf_counter() - t0
+            dt = now() - t0
             if ewma is None:
                 ewma = dt
             elif dt > self.tcfg.straggler_factor * ewma:

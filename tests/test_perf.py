@@ -1,0 +1,189 @@
+"""repro.perf: the counter-calibrated measurement API.
+
+Covers the three pillars: measure() median timing (with interleaved
+rivals), read-time reliability gating in channels_for(), and the
+canonical Report schema round-trip.
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.perf import channels as perf_channels
+from repro.perf import report as perf_report
+from repro.perf.measure import measure, measure_group, now
+
+pytestmark = pytest.mark.tier1
+
+
+# ---------------------------------------------------------------------------
+# measure
+# ---------------------------------------------------------------------------
+def test_measure_returns_stable_medians():
+    m = measure(lambda x: x + 1.0, jnp.ones((256,), jnp.float32), reps=5)
+    assert m.reps == 5 and len(m.all_s) == 5
+    assert m.median_s == float(np.median(m.all_s))
+    assert 0 < m.median_s <= max(m.all_s)
+    assert m.per_second(100.0) == 100.0 / m.median_s
+    # the last repeat's output rides along
+    np.testing.assert_allclose(np.asarray(m.result), 2.0)
+
+
+def test_measure_interleaves_rivals():
+    x = jnp.ones((256,), jnp.float32)
+    m = measure(lambda x: x + 1.0, x, reps=4,
+                interleave_with={"mul": (lambda x: x * 2.0, (x,)),
+                                 "thunk": lambda: 42})
+    assert set(m.interleaved) == {"mul", "thunk"}
+    for r in m.interleaved.values():
+        assert r.reps == 4 and r.median_s > 0
+    assert m.interleaved["thunk"].result == 42
+
+
+def test_measure_setup_runs_before_every_repeat():
+    calls = {"setup": 0, "fn": 0}
+
+    def setup():
+        # setup must precede the repeat's timed call
+        assert calls["setup"] == calls["fn"]
+        calls["setup"] += 1
+
+    def fn():
+        calls["fn"] += 1
+        return calls["fn"]
+
+    m = measure(fn, reps=3, warmup=1, jit=False, setup=setup)
+    assert calls["setup"] == calls["fn"] == 4        # 1 warmup + 3 reps
+    assert m.reps == 3
+
+
+def test_measure_group_times_all_candidates():
+    x = jnp.ones((128,), jnp.float32)
+    out = measure_group({"add": (lambda x: x + 1.0, (x,)),
+                         "mul": (lambda x: x * 2.0, (x,)),
+                         "thunk": lambda: 7}, reps=3)
+    assert set(out) == {"add", "mul", "thunk"}
+    for m in out.values():
+        assert m.reps == 3 and m.median_s > 0 and not m.interleaved
+    assert measure_group({}) == {}
+
+
+def test_now_is_monotonic():
+    a = now()
+    b = now()
+    assert b >= a
+
+
+# ---------------------------------------------------------------------------
+# channels: read-time reliability gating
+# ---------------------------------------------------------------------------
+def _cal(**verdicts):
+    base = {"flops_straightline": True, "flops_scan": True,
+            "bytes_copy": True, "bytes_fused_chain": True,
+            "transcendental": True, "op_histogram": True}
+    base.update(verdicts)
+    return perf_channels.Calibration(records=[], verdicts=base)
+
+
+def test_unreliable_channel_swaps_in_model_value():
+    x = jnp.ones((64,), jnp.float32)
+    ch = perf_channels.channels_for(
+        lambda x: x * 2.0 + 1.0, x, model_flops=123.0,
+        calibration=_cal(flops_straightline=False))
+    assert ch.flops.source == "model"
+    assert ch.flops.value == 123.0
+    assert not ch.flops.reliable
+
+
+def test_reliable_channel_reads_counter():
+    x = jnp.ones((64,), jnp.float32)
+    ch = perf_channels.channels_for(
+        lambda x: x * 2.0 + 1.0, x, model_flops=123.0,
+        calibration=_cal())
+    assert ch.flops.source == "counter"
+    assert ch.flops.reliable
+    assert ch.flops.value != 123.0          # the actual counter, not model
+    assert ch.total_ops == sum(ch.op_histogram.values()) > 0
+
+
+def test_unreliable_channel_without_model_is_flagged():
+    x = jnp.ones((64,), jnp.float32)
+    ch = perf_channels.channels_for(
+        lambda x: x * 2.0 + 1.0, x,
+        calibration=_cal(flops_straightline=False))
+    assert ch.flops.source in ("counter", "none")
+    assert not ch.flops.reliable
+
+
+def test_scan_program_judged_by_scan_verdict():
+    import jax
+
+    def scanned(x):
+        def body(c, _):
+            return c + x, None
+        return jax.lax.scan(body, x, None, length=4)[0]
+
+    x = jnp.ones((64,), jnp.float32)
+    # straightline reliable, scan unreliable: a while-lowered program
+    # must be gated by the scan verdict
+    ch = perf_channels.channels_for(
+        scanned, x, model_flops=99.0, calibration=_cal(flops_scan=False))
+    assert ch.while_bodies > 0
+    assert ch.flops.source == "model" and ch.flops.value == 99.0
+
+
+# ---------------------------------------------------------------------------
+# report schema
+# ---------------------------------------------------------------------------
+def test_report_roundtrips_through_json(tmp_path):
+    rep = perf_report.make_report(
+        "unit_bench", [{"a": 1, "b": 2.5}], meta={"reduced": True},
+        reliability={"flops_straightline": True, "flops_scan": False},
+        channels={"flops": 12.0})
+    path = tmp_path / "unit_bench.json"
+    path.write_text(rep.to_json())
+
+    payload = json.loads(path.read_text())
+    assert perf_report.validate(payload) == []
+    assert perf_report.validate_path(path) == []
+
+    rt = perf_report.Report.from_payload(payload)
+    assert rt.benchmark == rep.benchmark
+    assert rt.rows == rep.rows
+    assert rt.reliability == rep.reliability
+    assert rt.channels == rep.channels
+    assert rt.hw["name"] == "tpu_v5e"
+
+
+def test_report_validation_catches_malformed():
+    payload = perf_report.make_report("x", [{"a": 1}]).to_payload()
+    assert perf_report.validate(payload) == []
+
+    bad = dict(payload)
+    del bad["rows"]
+    assert any("rows" in e for e in perf_report.validate(bad))
+
+    bad = dict(payload, rows=[{"ok": 1}, "not-a-dict"])
+    assert any("rows[1]" in e for e in perf_report.validate(bad))
+
+    bad = dict(payload, schema="something-else")
+    assert perf_report.validate(bad)
+
+    bad = dict(payload, reliability={"ch": "yes"})
+    assert any("reliability" in e for e in perf_report.validate(bad))
+
+    assert perf_report.validate([1, 2, 3])      # non-dict payload
+
+
+def test_save_result_emits_canonical_schema(tmp_path, monkeypatch):
+    from benchmarks import common
+    monkeypatch.setattr(common, "RESULTS_DIR", tmp_path)
+    common.save_result("unit", [{"v": 1}], {"m": 2},
+                       reliability={"flops_scan": False})
+    payload = json.loads((tmp_path / "unit.json").read_text())
+    assert perf_report.validate(payload) == []
+    assert payload["benchmark"] == "unit"
+    assert payload["meta"] == {"m": 2}
+    assert payload["reliability"] == {"flops_scan": False}
+    assert payload["environment"]["jax_version"]
