@@ -8,11 +8,32 @@ wired into ``scripts/ci.sh --bench-smoke``).
 from __future__ import annotations
 
 import pathlib
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set
 
 from repro.perf import report as perf_report
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def select_benchmarks(only: Optional[str], names: List[str]) -> Set[str]:
+    """Resolve ``--only``'s exact comma list against the registry.
+
+    ``None`` selects everything.  Unknown names and an empty selection
+    (e.g. ``--only ,`` or ``--only ""``) both fail loudly listing the
+    valid names — a selection that silently runs nothing looks exactly
+    like a pass to whoever reads the summary line.
+    """
+    if only is None:
+        return set(names)
+    picked = [s.strip() for s in only.split(",") if s.strip()]
+    unknown = sorted(set(picked) - set(names))
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmarks {unknown}; available: {names}")
+    if not picked:
+        raise SystemExit(
+            f"--only selected no benchmarks; available: {names}")
+    return set(picked)
 
 
 def save_result(name: str, rows: List[Dict], meta: Dict | None = None, *,

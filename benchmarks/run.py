@@ -18,6 +18,7 @@ import time
 import traceback
 
 from benchmarks import (
+    common,
     fig2_strided,
     fig3_tail,
     fig4_arith,
@@ -62,14 +63,9 @@ def main() -> None:
             print(n)
         return
 
-    selected = set(names)
-    if args.only:
-        only = [s.strip() for s in args.only.split(",") if s.strip()]
-        unknown = sorted(set(only) - set(names))
-        if unknown:
-            raise SystemExit(
-                f"unknown benchmarks {unknown}; available: {names}")
-        selected = set(only)
+    # unknown or empty --only selections error out listing the valid
+    # names instead of silently running nothing (benchmarks.common)
+    selected = common.select_benchmarks(args.only, names)
 
     results = []                               # (name, wall_s, ok)
     for name, mod in BENCHMARKS:

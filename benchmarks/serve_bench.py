@@ -27,10 +27,21 @@ bound time divided by the measured wall (``repro.perf.report.
 roofline_fraction``) — so per-family speedups are roofline-attributable,
 not just tokens/s.  Rows land in benchmarks/results/serve_bench.json in
 the canonical Report schema.
+
+The **shared-prefix scenario** (always appended on the lm run; the only
+thing run under ``REPRO_BENCH_SMOKE=1``, at tiny shapes) serves a
+workload whose requests share a long common prompt prefix through two
+continuous engines — prefix cache on vs off — interleaved through
+``perf.measure``; rows report ``prefix_hit_tokens`` / ``prefix_hit_rate``
+and ``speedup_vs_nocache``.  The paper's premise makes this the
+highest-leverage serve optimization: prefill-style compute is exactly
+where RVV autovectorization is weakest, so the best prefill is the one
+the page table lets you skip.
 """
 from __future__ import annotations
 
 import argparse
+import os
 from typing import Dict, List, Optional
 
 import jax
@@ -42,6 +53,7 @@ from repro.configs import reduced_config
 from repro.models import build_model
 from repro.models.decode_state import stub_context
 from repro.perf.measure import measure as perf_measure
+from repro.perf.measure import measure_group
 from repro.perf.report import roofline_fraction
 from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
 
@@ -63,6 +75,14 @@ MIXES = [("uniform",       4, (24, 25),   (16, 17),   8),
 HIGH_VARIANCE_MIX = MIXES[2]
 
 REPEATS = 3          # interleaved passes; medians reported
+
+# shared-prefix workload: slots, shared prompt-prefix len, tail band,
+# gen band, requests.  The smoke variant keeps --bench-smoke under the
+# CI budget while still producing hits (prefix spans 2 pages).
+PREFIX_SCENARIO = dict(slots=4, shared_len=40, tail_band=(4, 13),
+                       gen_band=(8, 17), n_req=12)
+PREFIX_SCENARIO_SMOKE = dict(slots=2, shared_len=16, tail_band=(2, 6),
+                             gen_band=(3, 6), n_req=6)
 
 
 def _workload(rng, n, p_band, g_band, vocab):
@@ -158,6 +178,69 @@ def _run_pair(model, params, reqs, slots, max_len, *,
     return st, ct
 
 
+def _prefix_rows(cfg, model, params, sc: Dict, family: str = "lm"
+                 ) -> List[Dict]:
+    """Shared-prefix workload through two continuous engines — prefix
+    cache on vs off — as equal interleaved contenders (measure_group):
+    reset + re-submit runs as each contender's untimed per-repeat setup,
+    only the drain is timed."""
+    page = 8
+    rng = np.random.default_rng(13)
+    shared = rng.integers(1, cfg.vocab_size, size=sc["shared_len"])
+    reqs = []
+    for _ in range(sc["n_req"]):
+        tail = rng.integers(1, cfg.vocab_size,
+                            size=int(rng.integers(*sc["tail_band"])))
+        reqs.append((np.concatenate([shared, tail]),
+                     int(rng.integers(*sc["gen_band"]))))
+    longest = max(len(p) + g for p, g in reqs)
+    max_len = -(-longest // page) * page
+
+    engines = {
+        "prefix_cache": ContinuousBatchingEngine(
+            model, params, n_slots=sc["slots"], max_len=max_len,
+            page_size=page, prefill_chunk=8, prefix_cache=True),
+        "no_prefix_cache": ContinuousBatchingEngine(
+            model, params, n_slots=sc["slots"], max_len=max_len,
+            page_size=page, prefill_chunk=8),
+    }
+
+    def _pass(eng):
+        def setup():
+            eng.reset()
+            for prompt, glen in reqs:
+                eng.submit(prompt, glen)
+        return (eng.run, (), setup)
+
+    # one warm-up inside measure_group compiles both engines' step fns
+    # (including the cached engine's donor-row copy) before timing
+    ms = measure_group({name: _pass(eng) for name, eng in engines.items()},
+                       reps=REPEATS, warmup=1, jit=False)
+
+    rows = []
+    base = ms["no_prefix_cache"].median_s
+    for name, eng in engines.items():
+        s = eng.stats.summary()          # last pass (reset per repeat)
+        m = ms[name]
+        rows.append({
+            "family": family, "arch": cfg.arch_id, "mix": "shared_prefix",
+            "engine": "continuous", "cache": name,
+            "slots": sc["slots"], "requests": sc["n_req"],
+            "shared_prefix_len": sc["shared_len"],
+            "tok_per_s": s["generated_tokens"] / m.median_s,
+            "wall_s_median": m.median_s,
+            "wall_s_all": [round(w, 4) for w in m.all_s],
+            "generated_tokens": s["generated_tokens"],
+            "prefix_hit_tokens": s["prefix_hit_tokens"],
+            "prefix_hit_rate": s["prefix_hit_rate"],
+            "speedup_vs_nocache": base / m.median_s,
+            "model_flops": s["model_flops"],
+            "model_bytes": s["model_bytes"],
+            "roofline_utilization": roofline_fraction(
+                s["model_flops"], s["model_bytes"], m.median_s)})
+    return rows
+
+
 def _mix_rows(cfg, model, params, mixes, family: str) -> List[Dict]:
     rows = []
     for name, slots, p_band, g_band, n_req in mixes:
@@ -177,9 +260,21 @@ def _mix_rows(cfg, model, params, mixes, family: str) -> List[Dict]:
 
 
 def run(measure: bool = True,
-        families: Optional[List[str]] = None) -> List[Dict]:
+        families: Optional[List[str]] = None,
+        prefix_only: bool = False) -> List[Dict]:
     rows: List[Dict] = []
-    if families:
+    smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if smoke or prefix_only:
+        # CI smoke (scripts/ci.sh --bench-smoke) / --prefix-only: just the
+        # shared-prefix scenario at tiny shapes, through the same Report
+        # write path so the schema gate judges a real artifact
+        cfg = reduced_config(ARCH)
+        model = build_model(cfg)
+        params = model.init_params(jax.random.key(0))
+        rows = _prefix_rows(cfg, model, params,
+                            PREFIX_SCENARIO_SMOKE if smoke
+                            else PREFIX_SCENARIO)
+    elif families:
         if "all" in families:
             families = list(FAMILY_ARCHS)
         unknown = sorted(set(families) - set(FAMILY_ARCHS))
@@ -197,21 +292,36 @@ def run(measure: bool = True,
         model = build_model(cfg)
         params = model.init_params(jax.random.key(0))
         rows += _mix_rows(cfg, model, params, MIXES, "lm")
+        rows += _prefix_rows(cfg, model, params, PREFIX_SCENARIO)
     common.save_result("serve_bench", rows,
                        meta={"reduced": True, "repeats": REPEATS,
-                             "statistic": "median",
+                             "statistic": "median", "smoke": smoke,
                              "families": families or ["lm"]})
-    common.print_table(
-        "serving throughput: continuous batching vs static (reduced, "
-        "median of interleaved repeats)", rows,
-        ["family", "mix", "engine", "generated_tokens", "tok_per_s",
-         "speedup_vs_static", "mean_occupancy", "roofline_utilization"],
-        widths={"family": 7, "mix": 14, "engine": 11,
-                "roofline_utilization": 21})
-    print("-> roofline_utilization = modeled bound time (costmodel flops/"
-          "bytes vs the TPU-v5e ceiling) / measured host wall; absolute "
-          "values are small on this host — compare across families and "
-          "engines, not against 1.0.")
+    classic = [r for r in rows if r["mix"] != "shared_prefix"]
+    prefix = [r for r in rows if r["mix"] == "shared_prefix"]
+    if classic:
+        common.print_table(
+            "serving throughput: continuous batching vs static (reduced, "
+            "median of interleaved repeats)", classic,
+            ["family", "mix", "engine", "generated_tokens", "tok_per_s",
+             "speedup_vs_static", "mean_occupancy", "roofline_utilization"],
+            widths={"family": 7, "mix": 14, "engine": 11,
+                    "roofline_utilization": 21})
+        print("-> roofline_utilization = modeled bound time (costmodel "
+              "flops/bytes vs the TPU-v5e ceiling) / measured host wall; "
+              "absolute values are small on this host — compare across "
+              "families and engines, not against 1.0.")
+    if prefix:
+        common.print_table(
+            "shared-prefix workload: prefix cache on vs off (continuous "
+            "engine, median of interleaved repeats)", prefix,
+            ["cache", "generated_tokens", "prefix_hit_tokens",
+             "prefix_hit_rate", "tok_per_s", "speedup_vs_nocache"],
+            widths={"cache": 16, "prefix_hit_tokens": 17,
+                    "speedup_vs_nocache": 19})
+        print("-> prefix_hit_rate = prompt tokens served by donor-row "
+              "copies / all prompt tokens; prefill compute skipped "
+              "entirely for hit tokens (the paper's weakest RVV path).")
     return rows
 
 
@@ -221,5 +331,9 @@ if __name__ == "__main__":
                     help="'all' or comma list of "
                          f"{sorted(FAMILY_ARCHS)} — runs the "
                          "high-variance mix per family")
+    ap.add_argument("--prefix-only", action="store_true",
+                    help="run only the shared-prefix scenario "
+                         "(full shapes; REPRO_BENCH_SMOKE=1 for tiny)")
     args = ap.parse_args()
-    run(families=args.families.split(",") if args.families else None)
+    run(families=args.families.split(",") if args.families else None,
+        prefix_only=args.prefix_only)

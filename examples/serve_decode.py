@@ -30,6 +30,9 @@ def main():
     ap.add_argument("--prefill-chunk", type=int, default=8)
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="reuse shared page-aligned prompt prefixes "
+                         "from released requests' pooled pages")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -37,20 +40,28 @@ def main():
     params = model.init_params(jax.random.key(0))
     engine = ContinuousBatchingEngine(
         model, params, n_slots=args.slots, max_len=args.max_len,
-        page_size=args.page_size, prefill_chunk=args.prefill_chunk)
-    print(f"family={cfg.family}: continuous batching via DecodeState")
+        page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache)
+    print(f"family={cfg.family}: continuous batching via DecodeState"
+          + (" + prefix cache" if engine.prefix_cache else ""))
 
-    # mixed workload: prompt lengths 5..29, generation lengths 6..16
+    # mixed workload: a shared system-prompt prefix (so --prefix-cache
+    # has something to hit) + per-request tails of 5..29 tokens,
+    # generation lengths 6..16.  The read-only context (vlm image embeds
+    # / audio frames) is shared across requests too — prefix keys are
+    # seeded with the context hash, so per-request contexts would make
+    # the shared prompt unmatchable by design.
     rng = np.random.default_rng(0)
-    rids = []
-    for i in range(args.requests):
+    system_prompt = rng.integers(1, cfg.vocab_size, size=2 * args.page_size)
+    shared_ctx = stub_context(cfg, rng)
+    for _ in range(args.requests):
         plen = int(rng.integers(5, 30))
         glen = int(rng.integers(6, 17))
-        prompt = rng.integers(1, cfg.vocab_size, size=plen)
+        prompt = np.concatenate(
+            [system_prompt, rng.integers(1, cfg.vocab_size, size=plen)])
         rid = engine.submit(prompt, glen, temperature=args.temperature,
-                            extra=stub_context(cfg, rng))
-        rids.append((rid, plen, glen))
-        print(f"submit rid={rid} prompt_len={plen} gen_len={glen}")
+                            extra=shared_ctx)
+        print(f"submit rid={rid} prompt_len={len(prompt)} gen_len={glen}")
 
     t0 = now()
     results = engine.run()
@@ -70,6 +81,10 @@ def main():
     print(f"\nwall={wall:.2f}s  {s['tok_per_s']:.1f} tok/s generated  "
           f"steps={s['steps']}  p50={s['step_ms_p50']:.1f}ms "
           f"p95={s['step_ms_p95']:.1f}ms  occupancy={s['mean_occupancy']:.2f}")
+    if engine.prefix_cache:
+        print(f"prefix cache: {s['prefix_hit_tokens']} prompt tokens "
+              f"copied from pooled donor rows instead of re-prefilled "
+              f"(hit rate {s['prefix_hit_rate']:.2f})")
 
 
 if __name__ == "__main__":

@@ -31,7 +31,10 @@ for p in pathlib.Path("benchmarks/results").glob("*.json"):
         print(f"[bench-smoke] pruning legacy artifact {p}")
         p.unlink()
 PY
-    REPRO_BENCH_SMOKE=1 python -m benchmarks.run --only table1_counters
+    # table1 calibration + the shared-prefix serve scenario (serve_bench
+    # runs only that scenario at tiny shapes under REPRO_BENCH_SMOKE=1);
+    # every produced artifact is then schema-validated
+    REPRO_BENCH_SMOKE=1 python -m benchmarks.run --only table1_counters,serve_bench
     python -m repro.perf --validate benchmarks/results
     exit 0
 fi

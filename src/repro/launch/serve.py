@@ -37,6 +37,13 @@ def main():
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--int8", action="store_true",
                     help="weight-only int8 serving")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="page-table-keyed prefix caching: shared "
+                         "page-aligned prompt prefixes are copied from "
+                         "pooled donor rows instead of re-prefilled "
+                         "(token-addressable families only)")
+    ap.add_argument("--prefix-pool", type=int, default=8,
+                    help="max pooled prefix entries (LRU bound)")
     ap.add_argument("--static", action="store_true",
                     help="fixed-batch StaticBatchEngine baseline")
     args = ap.parse_args()
@@ -77,7 +84,11 @@ def main():
     max_len = -(-max_len // page) * page                  # round up to pages
     engine = ContinuousBatchingEngine(
         model, params, n_slots=args.slots, max_len=max_len,
-        page_size=page, prefill_chunk=args.prefill_chunk)
+        page_size=page, prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache, prefix_pool=args.prefix_pool)
+    if args.prefix_cache and not engine.prefix_cache:
+        print(f"[serve] family {cfg.family!r} has non-token-addressable "
+              "(recurrent) decode state; prefix cache disabled")
     for _ in range(n_req):
         plen = int(rng.integers(max(1, args.prompt_len // 2),
                                 args.prompt_len + 1))
@@ -95,6 +106,10 @@ def main():
           f"(incl. compile); steps={s['steps']} "
           f"p50={s['step_ms_p50']:.1f}ms "
           f"occupancy={s['mean_occupancy']:.2f}")
+    if engine.prefix_cache:
+        print(f"[serve] prefix cache: {s['prefix_hit_tokens']} prompt "
+              f"tokens served from pooled pages "
+              f"(hit rate {s['prefix_hit_rate']:.2f})")
     first = engine.requests()[0]
     print(f"[serve] sample rid={first.rid}: "
           f"{first.generated[:12]}")

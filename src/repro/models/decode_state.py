@@ -72,6 +72,55 @@ def set_state_row(state: Params, specs: Params, slot, row: Params) -> Params:
     return jax.tree.unflatten(treedef, out)
 
 
+def copy_state_prefix(state: Params, specs: Params, src_slot, dst_slot,
+                      n_tokens) -> Params:
+    """Token-range copy between slots: the device half of prefix caching.
+
+    For every leaf with a ``"kv_seq"`` axis, write the first ``n_tokens``
+    token entries of ``src_slot``'s row into ``dst_slot``'s row (entries
+    past ``n_tokens`` are zeroed, like a reset).  Per-slot integer
+    counters — leaves whose spec names no axis but ``"batch"`` (the
+    attention cache ``pos``) — are *set* to ``n_tokens`` in ``dst_slot``
+    so the next prefill chunk appends right after the copied prefix.
+    All other leaves (admission-installed cross K/V context) are left
+    untouched: the engine re-installs them after the copy.
+
+    jit-compatible; ``src_slot`` / ``dst_slot`` / ``n_tokens`` may be
+    traced, and ``src_slot == dst_slot`` is valid (in-place trim — the
+    re-admission-into-own-slot path, where nothing is reset first).
+
+    Only adapters declaring ``prefix_cachable = True`` may be driven
+    through this: the contract is that their entire state consists of
+    token-addressable ``kv_seq`` leaves, per-slot position counters, and
+    context leaves rewritten at every admission.  Recurrent state (ssm /
+    hybrid conv windows, SSD ``h``) is a running summary that cannot be
+    truncated to a token prefix, so those families opt out.
+    """
+    leaves, treedef = jax.tree.flatten(state)
+    spec_leaves = treedef.flatten_up_to(specs)
+    n_tokens = jnp.asarray(n_tokens, jnp.int32)
+    out = []
+    for leaf, spec in zip(leaves, spec_leaves):
+        bax = spec.index("batch")
+        if "kv_seq" in spec:
+            tax = spec.index("kv_seq")
+            row = jax.lax.dynamic_slice_in_dim(leaf, src_slot, 1, axis=bax)
+            iota = jax.lax.broadcasted_iota(jnp.int32, row.shape, tax)
+            row = jnp.where(iota < n_tokens, row, jnp.zeros((), leaf.dtype))
+            out.append(jax.lax.dynamic_update_slice_in_dim(
+                leaf, row, dst_slot, axis=bax))
+        elif (jnp.issubdtype(leaf.dtype, jnp.integer)
+              and all(a is None or a == "batch" for a in spec)):
+            row = jnp.full([1 if i == bax else d
+                            for i, d in enumerate(leaf.shape)],
+                           n_tokens, leaf.dtype)
+            out.append(jax.lax.dynamic_update_slice_in_dim(
+                leaf, row, dst_slot, axis=bax))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(treedef, out)
+
+
 def reset_state_slots(state: Params, specs: Params,
                       slot_mask: jax.Array) -> Params:
     """Zero the state rows (KV entries, positions, recurrent state,
@@ -147,6 +196,13 @@ class DecodeStateAdapter:
     """Base adapter: no read-only context, no extra inputs."""
 
     requires_extra: Tuple[str, ...] = ()
+    # True when the family's whole decode state is reconstructible from a
+    # token prefix via ``copy_state_prefix``: kv_seq-addressable leaves +
+    # per-slot position counters + admission-installed context, nothing
+    # else.  Recurrent families (ssm, hybrid) keep the default False —
+    # their conv/SSD state summarizes the full history and cannot be
+    # truncated, so the serve prefix cache never matches them.
+    prefix_cachable: bool = False
 
     def context_tokens(self, cfg) -> int:
         return 0
@@ -166,6 +222,8 @@ class DecodeStateAdapter:
 
 class AttentionDecodeState(DecodeStateAdapter):
     """dense / moe: one KV cache per layer."""
+
+    prefix_cachable = True
 
     def init(self, model, batch, max_len):
         cfg = model.cfg
@@ -231,6 +289,9 @@ class VLMDecodeState(_CrossContextMixin, DecodeStateAdapter):
     K/V over the image tokens, installed at admission."""
 
     requires_extra = ("image_embeds",)
+    # prompt K/V depends on the image context through cross-attention, so
+    # prefix keys are seeded with the context hash (cache.context_key)
+    prefix_cachable = True
 
     def context_tokens(self, cfg) -> int:
         return cfg.num_image_tokens
@@ -271,6 +332,7 @@ class AudioDecodeState(_CrossContextMixin, DecodeStateAdapter):
     (the encoder runs once per request, at install time)."""
 
     requires_extra = ("audio_frames",)
+    prefix_cachable = True
 
     def context_tokens(self, cfg) -> int:
         return cfg.n_audio_ctx

@@ -192,6 +192,16 @@ class LM:
         return decode_state.reset_state_slots(cache, self.cache_specs(),
                                               slot_mask)
 
+    def install_cache_prefix(self, cache: Params, src_slot, dst_slot,
+                             n_tokens) -> Params:
+        """Copy the first ``n_tokens`` token entries of ``src_slot``'s KV
+        rows into ``dst_slot`` and set its position counters to
+        ``n_tokens`` — the device half of serve prefix caching (only
+        valid for ``decode_state.prefix_cachable`` families).
+        jit-compatible; ``src_slot == dst_slot`` trims in place."""
+        return decode_state.copy_state_prefix(cache, self.cache_specs(),
+                                              src_slot, dst_slot, n_tokens)
+
     def install_slot_context(self, params: Params, cache: Params, slot,
                              extra: Dict[str, jax.Array]) -> Params:
         """Admission-time write of a request's read-only context state

@@ -29,12 +29,46 @@ prefill, youngest-first recompute-style preemption) and paged-slot
 accounting (serve/cache.py, including per-slot aux pages for installed
 context) never special-case a family.
 
+**Prefix caching** (``ContinuousBatchingEngine(prefix_cache=True)``) is
+keyed on the page table:
+
+  * *hash scheme* — a sha256 rolling hash of prompt-token chunks,
+    checkpointed at every ``page_size`` boundary and seeded with the
+    request's read-only-context hash (``cache.context_key``), so a
+    boundary key commits exactly the tokens (and image/audio context)
+    whose K/V the matching pages hold;
+  * *refcount lifecycle* — ``PageTable`` pages carry refcounts: a pooled
+    prefix entry holds one ref, every request admitted against it shares
+    the prefix pages (``incref``) instead of allocating, and release
+    drops one ref — pages recycle at zero, double release fails loudly;
+  * *LRU bound* — at most ``prefix_pool`` entries are retained; pooled
+    pages are additionally reclaimed LRU-first the moment a real
+    allocation (admission / decode growth) would otherwise fail, so the
+    pool only ever uses spare budget;
+  * *admission* — the scheduler matches the longest cached page-aligned
+    prefix, starts prefill at the matched offset, and the engine copies
+    the donor slot's K/V rows once (``copy_state_prefix``: token-range
+    copy + position counters) instead of recomputing chunk-by-chunk.
+    Preemption releases donate the victim's committed prefix back to the
+    pool, turning recompute-style preemption into copy-style.  Families
+    whose state is not token-addressable (ssm / hybrid recurrent state)
+    declare ``prefix_cachable = False`` and run with the cache off.
+
+It unblocks the remaining serve roadmap: sharded decode slots can share
+pooled prefix pages per shard, and async request intake can match
+prefixes at enqueue time (before a slot even frees).
+
 ``StaticBatchEngine`` remains the run-to-completion baseline used by the
 per-family temperature-0 parity tests and benchmarks/serve_bench.py;
 ``serve/sampling.py`` holds the greedy/temperature sampling shared by
 both engines.
 """
-from repro.serve.cache import PagedKVCache, PageTable  # noqa: F401
+from repro.serve.cache import (  # noqa: F401
+    PagedKVCache,
+    PageTable,
+    PrefixEntry,
+    context_key,
+)
 from repro.serve.engine import (  # noqa: F401
     ContinuousBatchingEngine,
     EngineStats,

@@ -15,18 +15,50 @@ paged-KV runners (vLLM / sarathi block managers, hyadmin page tables):
     case admission and decode growth can fail -> the scheduler reacts by
     queueing / preempting.
 
-``PageTable`` is the free-list; ``PagedKVCache`` adds the per-slot view
-(page lists, committed lengths) and the occupancy metrics the engine
-reports.
+``PageTable`` is the **refcounted** free-list: a page is handed out with
+refcount 1, extra owners take refs via ``incref``, and ``free`` drops one
+ref — the page returns to the free list only at zero.  Refs > 1 arise
+from **prefix sharing**: a request admitted against a cached prefix
+shares the prefix pages with the cache entry (and with any other request
+sharing the same prefix) instead of allocating its own.
+
+``PagedKVCache`` adds the per-slot view (page lists, committed lengths),
+the occupancy metrics the engine reports, and the **prefix cache**:
+
+  * keys are a page-aligned rolling hash of prompt-token chunks
+    (sha256 chained per ``page_size`` tokens, seeded with the request's
+    read-only-context hash so vlm/audio prefixes never match across
+    different image/audio contexts);
+  * when a request releases its slot, the page-aligned prefix of its
+    *prompt* pages moves into a bounded LRU pool (``prefix_pool``
+    entries) instead of being freed — the donor slot's device rows keep
+    the K/V until the slot is next claimed;
+  * admission matches the longest cached page-aligned prefix and shares
+    those pages (incref); the engine copies the donor slot's K/V rows
+    into the new slot once, instead of recomputing the prefix
+    chunk-by-chunk;
+  * pooled pages are reclaimed (LRU-first eviction) the moment a real
+    allocation would otherwise fail, so the pool only ever uses spare
+    capacity and never blocks admission or decode growth.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import hashlib
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
 
 
 class PageTable:
-    """Fixed-size page free-list (ids ``0..n_pages-1``)."""
+    """Fixed-size refcounted page free-list (ids ``0..n_pages-1``).
+
+    ``alloc`` hands out pages with refcount 1; ``incref`` adds an owner
+    (prefix sharing); ``free`` drops one ref and recycles the page at
+    zero.  Releasing a page that is not allocated is a real bookkeeping
+    hazard (double release) and fails loudly.
+    """
 
     def __init__(self, n_pages: int, page_size: int):
         if n_pages <= 0 or page_size <= 0:
@@ -34,7 +66,7 @@ class PageTable:
         self.n_pages = n_pages
         self.page_size = page_size
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
-        self._used: set = set()
+        self._ref: Dict[int, int] = {}
 
     @property
     def n_free(self) -> int:
@@ -42,7 +74,10 @@ class PageTable:
 
     @property
     def n_used(self) -> int:
-        return len(self._used)
+        return len(self._ref)
+
+    def refcount(self, page: int) -> int:
+        return self._ref.get(page, 0)
 
     def pages_for(self, n_tokens: int) -> int:
         """Pages needed to hold ``n_tokens`` tokens."""
@@ -56,13 +91,30 @@ class PageTable:
             raise RuntimeError(
                 f"page table exhausted: want {n}, free {self.n_free}")
         pages = [self._free.pop() for _ in range(n)]
-        self._used.update(pages)
+        for p in pages:
+            self._ref[p] = 1
         return pages
 
-    def free(self, pages: List[int]) -> None:
+    def incref(self, pages: Iterable[int]) -> None:
+        """Add an owner to already-allocated pages (prefix sharing)."""
         for p in pages:
-            self._used.remove(p)
-            self._free.append(p)
+            if p not in self._ref:
+                raise RuntimeError(
+                    f"incref of page {p} which is not allocated")
+            self._ref[p] += 1
+
+    def free(self, pages: Iterable[int]) -> None:
+        """Drop one reference per page; recycle pages reaching zero."""
+        for p in pages:
+            ref = self._ref.get(p)
+            if ref is None:
+                raise RuntimeError(
+                    f"double release: page {p} is not allocated")
+            if ref == 1:
+                del self._ref[p]
+                self._free.append(p)
+            else:
+                self._ref[p] = ref - 1
 
 
 @dataclasses.dataclass
@@ -70,6 +122,32 @@ class SlotInfo:
     pages: List[int]
     length: int                 # committed tokens (prompt written + generated)
     aux_pages: List[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One pooled prefix: ``length`` prompt tokens whose K/V live in the
+    (free) donor ``slot``'s device rows, pinned through ``pages``."""
+    eid: int
+    slot: int
+    length: int                 # page-aligned token count
+    pages: List[int]            # one ref held by the entry
+    keys: List[bytes]           # rolling-hash key per page boundary
+
+
+def context_key(extra: Optional[Dict[str, np.ndarray]]) -> Optional[bytes]:
+    """Hash a request's read-only context (image embeds / audio frames)
+    into the prefix-key seed: prompt K/V of cross-attention families
+    depends on the context, so prefixes only match when it is identical."""
+    if not extra:
+        return None
+    h = hashlib.sha256()
+    for name in sorted(extra):
+        arr = np.ascontiguousarray(extra[name])
+        h.update(name.encode())
+        h.update(str(arr.shape).encode() + str(arr.dtype).encode())
+        h.update(arr.tobytes())
+    return h.digest()
 
 
 class PagedKVCache:
@@ -86,11 +164,16 @@ class PagedKVCache:
     admission.  Aux pages are reserved for the slot's whole lifetime
     (they never grow with the sequence) and are released with the slot,
     so an oversubscribed budget sees the true per-request footprint.
+
+    ``prefix_pool`` > 0 enables the prefix cache: up to that many
+    released prefix entries are retained (LRU) for page-aligned prompt
+    reuse; 0 (the default) disables it entirely.
     """
 
     def __init__(self, n_slots: int, max_len: int, page_size: int = 16,
                  page_budget: Optional[int] = None,
-                 slot_aux_tokens: int = 0):
+                 slot_aux_tokens: int = 0,
+                 prefix_pool: int = 0):
         if max_len % page_size:
             raise ValueError(
                 f"max_len {max_len} must be a multiple of page_size "
@@ -105,6 +188,13 @@ class PagedKVCache:
                   if page_budget is None else page_budget)
         self.table = PageTable(budget, page_size)
         self.slots: Dict[int, SlotInfo] = {}
+        # -- prefix cache ------------------------------------------------
+        self.prefix_pool = prefix_pool
+        self._prefix_lru: "OrderedDict[int, PrefixEntry]" = OrderedDict()
+        self._prefix_index: Dict[bytes, int] = {}     # boundary hash -> eid
+        self._slot_entries: Dict[int, set] = {}       # donor slot -> {eid}
+        self._next_eid = 0
+        self.prefix_evictions = 0
 
     # -- slots ----------------------------------------------------------
     @property
@@ -122,21 +212,209 @@ class PagedKVCache:
     def page_utilization(self) -> float:
         return self.table.n_used / self.table.n_pages
 
-    # -- lifecycle ------------------------------------------------------
-    def can_admit(self, first_chunk: int) -> bool:
-        need = (self.table.pages_for(first_chunk)
-                + self.aux_pages_per_slot)
-        return bool(self.free_slots) and self.table.can_alloc(need)
+    # -- prefix cache ----------------------------------------------------
+    @property
+    def n_prefix_entries(self) -> int:
+        return len(self._prefix_lru)
 
-    def admit(self, first_chunk: int) -> int:
+    @property
+    def prefix_pages(self) -> int:
+        """Distinct pages currently pinned by pooled prefix entries."""
+        return len({p for e in self._prefix_lru.values() for p in e.pages})
+
+    def _hash_chain(self, tokens: Sequence[int],
+                    ctx_key: Optional[bytes]) -> List[bytes]:
+        """Rolling hash of ``tokens`` checkpointed at page boundaries:
+        one key per *full* page, chained so key i commits tokens
+        ``[0, (i+1)*page_size)`` plus the context seed."""
+        toks = np.asarray(tokens, np.int64)
+        h = hashlib.sha256(b"prefix\0" + (ctx_key or b"")).digest()
+        keys: List[bytes] = []
+        p = self.page_size
+        for i in range(len(toks) // p):
+            h = hashlib.sha256(h + toks[i * p:(i + 1) * p].tobytes()).digest()
+            keys.append(h)
+        return keys
+
+    def prefix_keys(self, prompt: Sequence[int],
+                    ctx_key: Optional[bytes] = None) -> List[bytes]:
+        """The prompt's matchable boundary keys — capped one page-aligned
+        boundary below the full prompt, so at least one token is always
+        re-prefilled and the completing chunk produces the first sample's
+        logits.  Pure in (prompt, ctx_key, page_size): callers admitting
+        repeatedly (a queued request retried every step) should compute
+        once and pass the result to :meth:`match_prefix`."""
+        n_keys = (len(prompt) - 1) // self.page_size
+        return self._hash_chain(
+            np.asarray(prompt)[:n_keys * self.page_size], ctx_key)
+
+    def match_prefix(self, prompt: Sequence[int],
+                     ctx_key: Optional[bytes] = None,
+                     keys: Optional[List[bytes]] = None
+                     ) -> tuple[int, Optional[PrefixEntry]]:
+        """Longest cached page-aligned prefix of ``prompt``.  Read-only:
+        the LRU touch happens when an admission actually consumes the
+        entry (``admit``), not on every blocked attempt."""
+        if not self.prefix_pool or not self._prefix_lru:
+            return 0, None
+        if keys is None:
+            keys = self.prefix_keys(prompt, ctx_key)
+        for i in range(len(keys), 0, -1):
+            eid = self._prefix_index.get(keys[i - 1])
+            if eid is not None:
+                return i * self.page_size, self._prefix_lru[eid]
+        return 0, None
+
+    def cache_prefix(self, slot: int, tokens: Sequence[int],
+                     ctx_key: Optional[bytes] = None) -> Optional[PrefixEntry]:
+        """Retain the page-aligned prefix of an active slot's committed
+        prompt ``tokens`` in the pool.  Call *before* ``release``: the
+        entry takes its own reference on the prefix pages, so the
+        subsequent release leaves them pinned."""
+        if not self.prefix_pool:
+            return None
+        n_pages = len(tokens) // self.page_size
+        if n_pages == 0:
+            return None
+        length = n_pages * self.page_size
+        keys = self._hash_chain(np.asarray(tokens)[:length], ctx_key)
+        if keys[-1] in self._prefix_index:                 # exact duplicate
+            self._prefix_lru.move_to_end(self._prefix_index[keys[-1]])
+            return None
+        info = self.slots[slot]
+        pages = list(info.pages[:n_pages])
+        self.table.incref(pages)
+        eid = self._next_eid
+        self._next_eid += 1
+        entry = PrefixEntry(eid=eid, slot=slot, length=length,
+                            pages=pages, keys=keys)
+        self._prefix_lru[eid] = entry
+        shadowed = set()
+        for k in keys:
+            prev = self._prefix_index.get(k)
+            if prev is not None:
+                shadowed.add(prev)
+            self._prefix_index[k] = eid                    # newest wins
+        self._slot_entries.setdefault(slot, set()).add(eid)
+        # an older entry whose every key now resolves to the new superset
+        # entry can never match again — evict it eagerly rather than let
+        # it pin pages and a pool slot until it ages out of the LRU
+        for prev in shadowed:
+            old = self._prefix_lru.get(prev)
+            if old is not None and not any(
+                    self._prefix_index.get(k) == prev for k in old.keys):
+                self._evict(prev)
+        while len(self._prefix_lru) > self.prefix_pool:
+            self._evict_lru()
+        return entry
+
+    def _evict(self, eid: int) -> None:
+        entry = self._prefix_lru.pop(eid)
+        self.table.free(entry.pages)
+        for k in entry.keys:
+            if self._prefix_index.get(k) == eid:
+                del self._prefix_index[k]
+        owners = self._slot_entries.get(entry.slot)
+        if owners is not None:
+            owners.discard(eid)
+            if not owners:
+                del self._slot_entries[entry.slot]
+        self.prefix_evictions += 1
+
+    def _evict_lru(self) -> None:
+        self._evict(next(iter(self._prefix_lru)))
+
+    def _reclaim(self, need: int, keep: frozenset = frozenset()) -> None:
+        """Evict pooled prefixes (LRU-first) until ``need`` pages can be
+        allocated — the pool uses spare capacity only and never starves a
+        real allocation.  Eviction only happens when it can actually
+        enable the allocation: pages shared with active slots are not
+        recoverable (freeing the pool ref leaves them pinned), so if
+        ``need`` exceeds free + recoverable pages, nothing is evicted and
+        the hit potential survives the failed attempt.  Pages shared only
+        *between* pooled entries are recovered by cascading evictions."""
+        while not self.table.can_alloc(need):
+            pooled_refs: Dict[int, int] = {}
+            for eid, entry in self._prefix_lru.items():
+                if eid in keep:
+                    continue
+                for p in entry.pages:
+                    pooled_refs[p] = pooled_refs.get(p, 0) + 1
+            recoverable = {p for p, r in pooled_refs.items()
+                           if r == self.table.refcount(p)}
+            if self.table.n_free + len(recoverable) < need:
+                return
+            victim = next(eid for eid, e in self._prefix_lru.items()
+                          if eid not in keep
+                          and any(p in recoverable for p in e.pages))
+            self._evict(victim)
+
+    def clear_prefix_cache(self) -> None:
+        """Drop every pooled entry (frees all entry-held page refs)."""
+        for eid in list(self._prefix_lru):
+            self._evict(eid)
+
+    # -- lifecycle ------------------------------------------------------
+    def can_admit(self, first_chunk: int, *, prefix_len: int = 0,
+                  prefix_entry: Optional[PrefixEntry] = None,
+                  exclude: frozenset = frozenset()) -> bool:
+        """True when a request could be admitted now — with ``first_chunk``
+        fresh prompt tokens on top of an optional ``prefix_len``-token
+        shared prefix.  Reclaims pooled pages as needed (never the entry
+        being matched); ``exclude`` removes slots from consideration
+        (in-flight prefix donors whose device rows must stay intact)."""
+        shared = 0 if prefix_entry is None else prefix_len // self.page_size
+        need = (self.table.pages_for(prefix_len + first_chunk) - shared
+                + self.aux_pages_per_slot)
+        if not [s for s in self.free_slots if s not in exclude]:
+            return False
+        keep = (frozenset() if prefix_entry is None
+                else frozenset((prefix_entry.eid,)))
+        self._reclaim(need, keep)
+        return self.table.can_alloc(need)
+
+    def admit(self, first_chunk: int, *, prefix_len: int = 0,
+              prefix_entry: Optional[PrefixEntry] = None,
+              exclude: frozenset = frozenset()) -> int:
         """Claim a free slot with pages for the first prompt chunk plus
-        the slot's lifetime aux-state (context) pages."""
-        if not self.can_admit(first_chunk):
+        the slot's lifetime aux-state (context) pages.
+
+        With a prefix match, the entry's pages covering ``prefix_len``
+        tokens are *shared* (incref) rather than allocated, and the slot
+        starts with ``prefix_len`` committed tokens.  The chunk + aux
+        pages come from one combined allocation, so a failed admission
+        can never leak the chunk pages when the aux tail does not fit.
+        """
+        if not self.can_admit(first_chunk, prefix_len=prefix_len,
+                              prefix_entry=prefix_entry, exclude=exclude):
             raise RuntimeError("no free slot / pages for admission")
-        slot = self.free_slots[0]
-        pages = self.table.alloc(self.table.pages_for(first_chunk))
-        aux = self.table.alloc(self.aux_pages_per_slot)
-        self.slots[slot] = SlotInfo(pages=pages, length=0, aux_pages=aux)
+        free = [s for s in self.free_slots if s not in exclude]
+        # prefer a slot not holding pooled prefix rows; else reuse the
+        # matched donor in place (evicts only the entry being consumed);
+        # else claim the slot whose entries we must drop anyway
+        clean = [s for s in free if not self._slot_entries.get(s)]
+        if clean:
+            slot = clean[0]
+        elif prefix_entry is not None and prefix_entry.slot in free:
+            slot = prefix_entry.slot
+        else:
+            slot = free[0]
+        shared = ([] if prefix_entry is None
+                  else list(prefix_entry.pages[:prefix_len // self.page_size]))
+        # take our reference on the shared pages BEFORE evicting the
+        # entries on the claimed slot (the matched entry may live there)
+        self.table.incref(shared)
+        if prefix_entry is not None and prefix_entry.eid in self._prefix_lru:
+            self._prefix_lru.move_to_end(prefix_entry.eid)  # LRU touch on use
+        for eid in list(self._slot_entries.get(slot, ())):
+            self._evict(eid)                   # claimed slot rows are dead
+        need = (self.table.pages_for(prefix_len + first_chunk) - len(shared)
+                + self.aux_pages_per_slot)
+        newly = self.table.alloc(need)         # atomic: chunk + aux together
+        split = need - self.aux_pages_per_slot
+        self.slots[slot] = SlotInfo(pages=shared + newly[:split],
+                                    length=prefix_len,
+                                    aux_pages=newly[split:])
         return slot
 
     def grow(self, slot: int, n_tokens: int) -> bool:
@@ -149,6 +427,7 @@ class PagedKVCache:
             return False
         need = self.table.pages_for(new_len) - len(info.pages)
         if need > 0:
+            self._reclaim(need)
             if not self.table.can_alloc(need):
                 return False
             info.pages.extend(self.table.alloc(need))
@@ -156,8 +435,12 @@ class PagedKVCache:
         return True
 
     def release(self, slot: int) -> None:
-        """Free the slot and recycle all its pages (aux included)."""
-        info = self.slots.pop(slot)
+        """Free the slot and drop its page references (aux included);
+        pages shared with pooled prefixes or other slots stay allocated."""
+        info = self.slots.pop(slot, None)
+        if info is None:
+            raise RuntimeError(
+                f"double release: slot {slot} is not active")
         self.table.free(info.pages)
         self.table.free(info.aux_pages)
 

@@ -141,13 +141,20 @@ class EngineStats:
     # benchmarks/serve_bench derives roofline-relative utilization
     model_flops: float = 0.0
     model_bytes: float = 0.0
+    # prompt tokens whose prefill was skipped via the prefix cache
+    # (mirrors Scheduler.prefix_hit_tokens)
+    prefix_hit_tokens: int = 0
 
     def summary(self) -> Dict[str, float]:
         if not self.steps:
             return {"steps": 0, "generated_tokens": 0, "tok_per_s": 0.0,
                     "model_flops": self.model_flops,
-                    "model_bytes": self.model_bytes}
+                    "model_bytes": self.model_bytes,
+                    "prefix_hit_tokens": self.prefix_hit_tokens,
+                    "prefix_hit_rate": 0.0}
         walls = sorted(s.wall_s for s in self.steps)
+        prefill_tokens = sum(s.n_prefill_tokens for s in self.steps)
+        prompt_total = prefill_tokens + self.prefix_hit_tokens
 
         def pct(p):
             return walls[min(len(walls) - 1, int(p * len(walls)))]
@@ -167,6 +174,11 @@ class EngineStats:
             "model_bytes": self.model_bytes,
             "model_tflops_per_s": (self.model_flops / self.wall_s / 1e12
                                    if self.wall_s else 0.0),
+            # fraction of all prompt tokens served from the prefix cache
+            # instead of being prefilled
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens / prompt_total
+                                if prompt_total else 0.0),
         }
 
 
@@ -187,19 +199,36 @@ class ContinuousBatchingEngine:
     Cross-context families pass the per-request context to ``submit``::
 
         eng.submit(prompt, 16, extra={"image_embeds": embeds})    # (T, d)
+
+    ``prefix_cache=True`` enables page-table-keyed prefix caching for
+    families whose decode state is token-addressable (dense/moe, vlm,
+    audio): released requests' page-aligned prompt prefixes stay pooled
+    (bounded by ``prefix_pool`` entries, refcounted pages, reclaimed
+    LRU-first under pressure) and a matching admission copies the donor
+    slot's K/V once instead of re-prefilling — preemption recovery
+    included.  Recurrent families (ssm, hybrid) silently run with the
+    cache off: their conv/SSD state cannot be truncated to a prefix.
     """
 
     def __init__(self, model: LM, params, *, n_slots: int, max_len: int,
                  page_size: int = 16, prefill_chunk: int = 8,
                  page_budget: Optional[int] = None,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 prefix_cache: bool = False, prefix_pool: int = 8):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        # prefix caching only applies to families whose whole decode
+        # state is a token prefix (attention KV + pos + installed
+        # context); recurrent families run with the pool disabled and a
+        # permanent 0% hit rate rather than wrong state
+        self.prefix_cache = bool(prefix_cache
+                                 and model.decode_state.prefix_cachable)
         self.kv = PagedKVCache(
             n_slots, max_len, page_size, page_budget=page_budget,
-            slot_aux_tokens=model.decode_state.context_tokens(model.cfg))
+            slot_aux_tokens=model.decode_state.context_tokens(model.cfg),
+            prefix_pool=prefix_pool if self.prefix_cache else 0)
         self.sched = Scheduler(self.kv, prefill_chunk=prefill_chunk,
                                eos_id=eos_id)
         self.cache = model.init_cache(n_slots, max_len)
@@ -230,6 +259,10 @@ class ContinuousBatchingEngine:
         # once — extra shapes are fixed by the config
         self._install_fn = jax.jit(model.install_slot_context,
                                    donate_argnums=(1,))
+        # prefix-hit admission: copy the donor slot's first n tokens of
+        # K/V into the admitted slot (traced src/dst/n -> compiled once)
+        self._prefix_fn = jax.jit(model.install_cache_prefix,
+                                  donate_argnums=(0,))
         # output rows outnumber slots so finished requests' tokens can
         # stay on device until a flush point — the host reads the buffer
         # once per ~2*n_slots finishes instead of syncing every finish
@@ -316,7 +349,8 @@ class ContinuousBatchingEngine:
         self.kv = PagedKVCache(self.n_slots, self.max_len,
                                self.kv.page_size,
                                page_budget=self.kv.table.n_pages,
-                               slot_aux_tokens=self.kv.slot_aux_tokens)
+                               slot_aux_tokens=self.kv.slot_aux_tokens,
+                               prefix_pool=self.kv.prefix_pool)
         self.sched = Scheduler(self.kv,
                                prefill_chunk=self.sched.prefill_chunk,
                                eos_id=self.sched.eos_id)
@@ -381,11 +415,31 @@ class ContinuousBatchingEngine:
                 self._flush_results()
             self._slot_row[slot] = self._free_rows.pop()
         if plan.reset_mask.any():
-            self.cache = self._reset_fn(self.cache, plan.reset_mask)
+            # three-phase (re-)admission: zero the cold slots, then copy
+            # cached prefixes from their donor rows (prefix-hit slots are
+            # NOT zeroed first — the copy overwrites/zeros every token-
+            # addressable leaf itself, and a donor may be the same slot),
+            # then install per-request read-only context.  The scheduler
+            # guarantees no donor row is claimed by this same plan, so
+            # zeroing before copying can never destroy a donor.
+            zero_mask = plan.reset_mask.copy()
+            prefix_installs = []
             for slot in np.nonzero(plan.reset_mask)[0]:
-                # (re-)admission: install the request's read-only context
-                # into the freshly zeroed row (cross K/V projection; the
-                # audio adapter also runs the encoder here, once)
+                req = self.sched.active.get(int(slot))
+                if req is not None and req.prefix_len > 0:
+                    zero_mask[slot] = False
+                    prefix_installs.append((int(slot), int(req.prefix_src),
+                                            int(req.prefix_len)))
+            if zero_mask.any():
+                self.cache = self._reset_fn(self.cache, zero_mask)
+            for dst, src, n_tok in prefix_installs:
+                self.cache = self._prefix_fn(self.cache, np.int32(src),
+                                             np.int32(dst), np.int32(n_tok))
+            for slot in np.nonzero(plan.reset_mask)[0]:
+                # install the request's read-only context into the row
+                # (cross K/V projection; the audio adapter also runs the
+                # encoder here, once) — after any prefix copy, so the
+                # context always reflects THIS request
                 req = self.sched.active.get(int(slot))
                 if req is not None and req.extra:
                     self.cache = self._install_fn(
@@ -431,6 +485,7 @@ class ContinuousBatchingEngine:
         discarded = self.sched.discarded_tokens - self._seen_discarded
         self._seen_discarded = self.sched.discarded_tokens
         self.stats.generated_tokens += len(plan.sample_slots) - discarded
+        self.stats.prefix_hit_tokens = self.sched.prefix_hit_tokens
         self.stats.wall_s += dt
         self._step_idx += 1
         return self.sched.has_work()

@@ -20,17 +20,28 @@ Page pressure: admission requires a free slot plus pages for the first
 chunk; decode growth that cannot get a page preempts the *youngest*
 running request back to the queue front (recompute-style preemption — its
 pages are freed and its prefill restarts when re-admitted).
+
+Prefix caching (``PagedKVCache(prefix_pool > 0)``): admission matches
+each queued request's longest cached page-aligned prompt prefix and
+starts prefill at the matched offset — ``prompt_pos`` skips straight to
+``prefix_len`` and the engine installs the donor slot's K/V rows into
+the new slot once (``Request.prefix_src`` / ``prefix_len``) instead of
+recomputing the prefix chunk-by-chunk.  Release paths (finish *and*
+preemption) hand the committed prompt prefix to the pool, which turns
+recompute-style preemption into copy-style for cached prefixes: the
+re-admitted victim matches its own pages and resumes prefill at the
+page-aligned high-water mark.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Set
 
 import numpy as np
 
-from repro.serve.cache import PagedKVCache
+from repro.serve.cache import PagedKVCache, context_key
 
 
 class RequestState(enum.Enum):
@@ -52,6 +63,15 @@ class Request:
     state: RequestState = RequestState.QUEUED
     slot: Optional[int] = None
     prompt_pos: int = 0                # prompt tokens already committed
+    # prefix-cache bookkeeping for the current admission: the engine
+    # copies ``prefix_len`` tokens of K/V from donor slot ``prefix_src``
+    # into this request's slot instead of resetting + re-prefilling them
+    prefix_len: int = 0
+    prefix_src: Optional[int] = None
+    ctx_key: Optional[bytes] = None    # read-only-context hash (prefix key)
+    # boundary hash chain of the prompt, computed once at first admission
+    # attempt (a queued request is re-matched every step until it admits)
+    prefix_keys: Optional[List[bytes]] = None
     n_generated: int = 0               # tokens sampled so far (count only:
     #                                    values live in the engine's device
     #                                    output buffer until finish)
@@ -132,6 +152,12 @@ class Scheduler:
         # tokens sampled by victims and thrown away by recompute-style
         # preemption (lets the engine report *useful* throughput)
         self.discarded_tokens = 0
+        # prompt tokens whose prefill was skipped via the prefix cache
+        self.prefix_hit_tokens = 0
+        # slots admitted while composing the current plan: their device
+        # rows are not valid until the engine executes the plan, so a
+        # same-plan preemption must not donate them to the prefix pool
+        self._fresh_slots: Set[int] = set()
 
     # -- intake ---------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
@@ -147,7 +173,9 @@ class Scheduler:
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       temperature=temperature, extra=extra,
-                      submit_step=step)
+                      submit_step=step,
+                      ctx_key=(context_key(extra)
+                               if self.kv.prefix_pool else None))
         self._next_rid += 1
         self.queue.append(req)
         return req
@@ -158,18 +186,50 @@ class Scheduler:
     # -- composition ----------------------------------------------------
     def _admit(self, step: int) -> List[int]:
         """Move queued requests into free slots while slot+page budget
-        allows; returns the slots admitted this step (need a cache reset)."""
+        allows; returns the slots admitted this step (need a cache reset
+        or, on a prefix hit, a donor-row copy).
+
+        Prefix matching: the longest cached page-aligned prompt prefix
+        skips straight to ``prompt_pos = prefix_len``; the matched pages
+        are shared (refcounted) with the pool entry.  Donor slots used by
+        this plan are excluded from being claimed until the engine has
+        executed the copies (``donors_busy``)."""
         admitted = []
+        donors_busy: Set[int] = set()
         while self.queue:
             req = self.queue[0]
-            first_chunk = min(self.prefill_chunk, req.prompt_len)
-            if not self.kv.can_admit(first_chunk):
-                break
+            if req.prefix_keys is None and self.kv.prefix_pool:
+                req.prefix_keys = self.kv.prefix_keys(req.prompt,
+                                                      ctx_key=req.ctx_key)
+            plen, entry = self.kv.match_prefix(req.prompt,
+                                               keys=req.prefix_keys)
+            first_chunk = min(self.prefill_chunk, req.prompt_len - plen)
+            if not self.kv.can_admit(first_chunk, prefix_len=plen,
+                                     prefix_entry=entry,
+                                     exclude=frozenset(donors_busy)):
+                # the prefix path may be blocked only by the donor
+                # exclusions / page layout — fall back to a cold admission
+                # before giving up on this step
+                cold_chunk = min(self.prefill_chunk, req.prompt_len)
+                if not (plen and self.kv.can_admit(
+                        cold_chunk, exclude=frozenset(donors_busy))):
+                    break
+                plen, entry, first_chunk = 0, None, cold_chunk
             self.queue.popleft()
-            slot = self.kv.admit(first_chunk)
+            slot = self.kv.admit(first_chunk, prefix_len=plen,
+                                 prefix_entry=entry,
+                                 exclude=frozenset(donors_busy))
+            # a match never covers the whole prompt (capped one token
+            # short so the completing chunk still produces the logits of
+            # generated token #1) -> always at least one chunk to prefill
             req.state = RequestState.PREFILLING
             req.slot = slot
-            req.prompt_pos = 0
+            req.prompt_pos = plen
+            req.prefix_len = plen
+            req.prefix_src = entry.slot if entry is not None else None
+            self.prefix_hit_tokens += plen
+            if entry is not None and entry.slot != slot:
+                donors_busy.add(entry.slot)
             req.n_generated = 0
             req.generated = []
             req.admit_step = step
@@ -196,10 +256,25 @@ class Scheduler:
         for slot in reversed(self._admission_order[cutoff:]):
             self._admission_order.remove(slot)
             req = self.active.pop(slot)
+            if slot not in self._fresh_slots:
+                # copy-style preemption: pool the committed prompt prefix
+                # (the slot's device rows stay valid until re-claimed) so
+                # re-admission copies instead of recomputing it.  Slots
+                # admitted while composing THIS plan have no device state
+                # yet — their rows must not be donated.
+                self.kv.cache_prefix(slot, req.prompt[:req.prompt_pos],
+                                     ctx_key=req.ctx_key)
+            else:
+                # the admission is torn down before the engine ever ran
+                # its donor copy — no prefill was actually skipped, and
+                # re-admission will match (and count) again
+                self.prefix_hit_tokens -= req.prefix_len
             self.kv.release(slot)
             req.state = RequestState.QUEUED
             req.slot = None
             req.prompt_pos = 0
+            req.prefix_len = 0
+            req.prefix_src = None
             self.discarded_tokens += req.n_generated
             req.n_generated = 0
             req.generated = []
@@ -211,6 +286,7 @@ class Scheduler:
     def next_plan(self, step: int) -> Optional[StepPlan]:
         """Compose the next mixed step, or None when nothing is runnable."""
         reset_slots = set(self._admit(step))
+        self._fresh_slots = set(reset_slots)
 
         # decode rows: ensure each decoding slot can grow by one token;
         # on page exhaustion preempt the youngest other request (younger
@@ -336,6 +412,10 @@ class Scheduler:
                 req.state = RequestState.FINISHED
                 req.finish_step = step
                 req.finish_slot = slot
+                # pool the full prompt's page-aligned prefix before the
+                # release drops the slot's page refs: the freed slot's
+                # device rows keep the K/V until the slot is re-claimed
+                self.kv.cache_prefix(slot, req.prompt, ctx_key=req.ctx_key)
                 self.kv.release(slot)
                 self.active.pop(slot)
                 self._admission_order.remove(slot)

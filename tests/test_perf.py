@@ -187,3 +187,20 @@ def test_save_result_emits_canonical_schema(tmp_path, monkeypatch):
     assert payload["meta"] == {"m": 2}
     assert payload["reliability"] == {"flops_scan": False}
     assert payload["environment"]["jax_version"]
+
+
+def test_benchmark_selection_rejects_unknown_and_empty():
+    # regression: a bad --only selection must error out listing the valid
+    # names, never silently run zero benchmarks (which reads as a pass)
+    from benchmarks.common import select_benchmarks
+    names = ["table1_counters", "serve_bench"]
+    assert select_benchmarks(None, names) == set(names)
+    assert select_benchmarks("serve_bench", names) == {"serve_bench"}
+    assert select_benchmarks(" serve_bench , table1_counters ",
+                             names) == set(names)
+    with pytest.raises(SystemExit, match="unknown benchmarks.*serve_benchx"):
+        select_benchmarks("serve_benchx", names)
+    with pytest.raises(SystemExit, match="selected no benchmarks"):
+        select_benchmarks(",", names)
+    with pytest.raises(SystemExit, match="selected no benchmarks"):
+        select_benchmarks("", names)

@@ -64,6 +64,46 @@ def test_paged_cache_page_budget_blocks_admission():
     assert kv.can_admit(8)
 
 
+def test_page_double_free_raises_named_error():
+    # regression: freeing a non-allocated page used to raise a bare
+    # KeyError from set.remove — with refcounted prefix sharing a silent
+    # or cryptic double release is a real hazard
+    pt = PageTable(n_pages=4, page_size=8)
+    pages = pt.alloc(2)
+    pt.free(pages)
+    with pytest.raises(RuntimeError, match=f"page {pages[0]}"):
+        pt.free([pages[0]])
+    with pytest.raises(RuntimeError, match="not allocated"):
+        pt.incref([pages[0]])
+
+
+def test_slot_double_release_raises_named_error():
+    # regression: releasing a free slot used to raise a bare KeyError
+    # from dict.pop
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=8)
+    s = kv.admit(first_chunk=8)
+    kv.release(s)
+    with pytest.raises(RuntimeError, match=f"slot {s}"):
+        kv.release(s)
+    with pytest.raises(RuntimeError, match="slot 1"):
+        kv.release(1)                          # never admitted at all
+    assert kv.table.n_used == 0
+
+
+def test_admission_allocates_atomically():
+    # regression: admit() used to make two separate alloc calls (prompt
+    # chunk, then aux) after one can_admit check — a budget that covers
+    # the chunk but not the aux tail must fail cleanly without leaking
+    # the chunk pages
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=8,
+                      slot_aux_tokens=20, page_budget=3)  # needs 1 + 3 aux
+    assert not kv.can_admit(8)
+    with pytest.raises(RuntimeError):
+        kv.admit(first_chunk=8)
+    assert kv.table.n_used == 0                # nothing leaked
+    assert kv.free_slots == [0, 1]
+
+
 # ---------------------------------------------------------------------------
 # scheduler (host-only)
 # ---------------------------------------------------------------------------
@@ -279,6 +319,9 @@ def test_oversubscribed_pages_preempt_youngest_and_recover(tiny_model):
     # throughput accounting counts only useful tokens: samples discarded
     # by the preemption (victim recomputed from token 0) don't inflate it
     assert eng.stats.generated_tokens == sum(len(t) for t in out.values())
+    # a full drain returns every page (admission allocates atomically,
+    # preemption/finish release symmetrically)
+    assert eng.kv.table.n_used == 0 and eng.kv.n_active == 0
     solo = ContinuousBatchingEngine(model, params, n_slots=1, max_len=32,
                                     page_size=8)
     sr = solo.submit(np.arange(1, 17), 4)

@@ -1,0 +1,274 @@
+"""Prefix caching keyed on the page table: refcounted shared pages,
+rolling-hash matching, LRU bound + pressure reclaim (host-level), and
+engine-level temperature-0 parity between prefix-hit and cold-prefill
+runs — including the oversubscribed-budget preemption path — across all
+five families."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.models.decode_state import get_adapter, stub_context
+from repro.serve import (
+    ContinuousBatchingEngine,
+    PagedKVCache,
+    RequestState,
+    Scheduler,
+)
+
+pytestmark = pytest.mark.tier1
+
+FAMILY_ARCHS = [
+    ("lm", "granite-3-2b"),
+    ("ssm", "mamba2-780m"),
+    ("hybrid", "jamba-v0.1-52b"),
+    ("vlm", "llama-3.2-vision-90b"),
+    ("audio", "whisper-base"),
+]
+PAGE = 8
+
+
+# ---------------------------------------------------------------------------
+# host-level: hash matching, refcounts, LRU, reclaim (no jax)
+# ---------------------------------------------------------------------------
+def _committed_slot(kv, tokens):
+    """Admit + grow a slot until ``tokens`` are all committed."""
+    slot = kv.admit(first_chunk=min(8, len(tokens)))
+    assert kv.grow(slot, len(tokens))
+    return slot
+
+
+def test_prefix_match_shares_refcounted_pages():
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=PAGE, prefix_pool=4)
+    prompt = np.arange(1, 25)                       # 24 tokens = 3 pages
+    slot = _committed_slot(kv, prompt)
+    entry = kv.cache_prefix(slot, prompt)
+    assert entry is not None and entry.length == 24
+    assert all(kv.table.refcount(p) == 2 for p in entry.pages)
+    kv.release(slot)
+    # pooled pages survive the release with exactly the entry's ref
+    assert all(kv.table.refcount(p) == 1 for p in entry.pages)
+    assert kv.table.n_used == 3
+
+    # a longer prompt sharing the prefix matches (capped page-aligned
+    # below its own full length) and shares the pages
+    plen, hit = kv.match_prefix(np.concatenate([prompt, [91, 92]]))
+    assert plen == 24 and hit is entry
+    s2 = kv.admit(first_chunk=2, prefix_len=plen, prefix_entry=hit)
+    assert kv.length(s2) == 24
+    assert all(kv.table.refcount(p) == 2 for p in entry.pages)
+    # the admitted request grows past the shared prefix on fresh pages
+    assert kv.grow(s2, 2 + 4)
+    kv.release(s2)
+    assert all(kv.table.refcount(p) == 1 for p in entry.pages)
+    kv.clear_prefix_cache()
+    assert kv.table.n_used == 0
+
+
+def test_prefix_match_requires_identical_tokens_and_context():
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=PAGE, prefix_pool=4)
+    prompt = np.arange(1, 25)
+    slot = _committed_slot(kv, prompt)
+    kv.cache_prefix(slot, prompt, ctx_key=b"ctx-a")
+    kv.release(slot)
+    # a mid-prefix token change only matches the boundaries before it
+    changed = prompt.copy()
+    changed[10] = 77
+    assert kv.match_prefix(changed, ctx_key=b"ctx-a")[0] == 8
+    # a different read-only context must never match (vlm/audio prompt
+    # K/V depends on the context through cross-attention)
+    assert kv.match_prefix(prompt, ctx_key=b"ctx-b") == (0, None)
+    # a full-prompt match is capped one token short (page-aligned), so
+    # the completing chunk still produces the first sample's logits
+    assert kv.match_prefix(prompt, ctx_key=b"ctx-a")[0] == 16
+
+
+def test_prefix_pool_lru_bound_and_pressure_reclaim():
+    # 3 slots so pooled donor rows persist across the later admissions
+    kv = PagedKVCache(n_slots=3, max_len=32, page_size=PAGE,
+                      page_budget=4, prefix_pool=2)
+    prompts = [np.arange(1, 9) + 100 * i for i in range(3)]   # 1 page each
+    entries = []
+    for p in prompts:
+        slot = _committed_slot(kv, p)
+        entries.append(kv.cache_prefix(slot, p))
+        kv.release(slot)
+    # LRU bound: the first entry was evicted to stay within prefix_pool=2
+    assert kv.n_prefix_entries == 2 and kv.prefix_evictions == 1
+    assert kv.match_prefix(np.concatenate([prompts[0], [1]]))[0] == 0
+    # page pressure: a fresh admission needing the whole budget reclaims
+    # the pooled pages (LRU-first) instead of failing
+    assert kv.can_admit(8)
+    slot = kv.admit(first_chunk=8)
+    assert kv.grow(slot, 32)                       # 4 pages: needs both
+    assert kv.n_prefix_entries == 0
+    kv.release(slot)
+    assert kv.table.n_used == 0
+
+
+def test_superset_entry_evicts_shadowed_shorter_entry():
+    # a later donation extending a pooled prefix rebinds every boundary
+    # key of the shorter entry; the unmatchable entry must be evicted
+    # eagerly instead of pinning pages + a pool slot until LRU age-out
+    kv = PagedKVCache(n_slots=3, max_len=32, page_size=PAGE, prefix_pool=4)
+    short, long_ = np.arange(1, 9), np.arange(1, 25)    # 1 vs 3 pages
+    s = _committed_slot(kv, short)
+    kv.cache_prefix(s, short)
+    kv.release(s)
+    s = _committed_slot(kv, long_)
+    kv.cache_prefix(s, long_)
+    kv.release(s)
+    assert kv.n_prefix_entries == 1                     # short was shadowed
+    plen, entry = kv.match_prefix(np.concatenate([short, [9]]))
+    assert plen == 8 and entry.length == 24             # served by superset
+    kv.clear_prefix_cache()
+    assert kv.table.n_used == 0
+
+
+def test_reclaim_skips_entries_shared_with_active_slots():
+    # evicting an entry whose pages are all held by an admitted request
+    # frees nothing — reclaim must skip it (keeping the hit potential)
+    # and the allocation fail cleanly
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=PAGE,
+                      page_budget=3, prefix_pool=4)
+    prompt = np.arange(1, 17)                           # 2 pages
+    slot = _committed_slot(kv, prompt)
+    entry = kv.cache_prefix(slot, prompt)
+    kv.release(slot)
+    plen, hit = kv.match_prefix(np.concatenate([prompt, [77]]))
+    assert plen == 16 and hit is entry
+    s2 = kv.admit(first_chunk=1, prefix_len=plen, prefix_entry=hit)
+    assert kv.length(s2) == 16 and kv.table.n_used == 3
+    assert all(kv.table.refcount(p) == 2 for p in entry.pages)
+    # growth needing one more page fails cleanly: every pooled page is
+    # shared with the admitted slot, so evicting the entry would free
+    # nothing — it must survive the reclaim attempt
+    assert not kv.grow(s2, 16)
+    assert kv.n_prefix_entries == 1
+    kv.release(s2)
+    kv.clear_prefix_cache()
+    assert kv.table.n_used == 0
+
+
+def test_scheduler_admits_at_matched_offset():
+    kv = PagedKVCache(n_slots=1, max_len=32, page_size=PAGE, prefix_pool=4)
+    sched = Scheduler(kv, prefill_chunk=4)
+    a = sched.submit(np.arange(1, 21), max_new_tokens=2)      # 20 tokens
+    step = 0
+    while a.state is not RequestState.FINISHED:
+        sched.commit(sched.next_plan(step), None, step)
+        step += 1
+        assert step < 50
+    # same prompt + tail: admission starts prefill at the pooled 16-token
+    # page boundary instead of token 0
+    b = sched.submit(np.concatenate([np.arange(1, 21), [55, 56]]), 2)
+    plan = sched.next_plan(step)
+    assert b.state is RequestState.PREFILLING
+    assert b.prefix_len == 16 and b.prompt_pos == 16
+    assert b.prefix_src is not None
+    assert sched.prefix_hit_tokens == 16
+    # the first prefill chunk starts at the matched offset
+    (chunk,) = plan.prefills
+    assert int(chunk.positions[0, 0]) == 16
+    sched.commit(plan, None, step)
+    assert b.prompt_pos > 16
+
+
+# ---------------------------------------------------------------------------
+# engine-level: prefix-hit vs cold parity, all five families, preemption
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("family,arch", FAMILY_ARCHS,
+                         ids=[f for f, _ in FAMILY_ARCHS])
+def test_prefix_hit_matches_cold_run_under_preemption(family, arch):
+    """Shared-prefix workload on an oversubscribed budget with the prefix
+    cache enabled: admission shares refcounted pages, youngest-first
+    preemption donates its committed prefix (copy-style re-admission),
+    and the temperature-0 tokens must equal the cold (cache-off) run's —
+    argmax-stable parity, per the PR-2 note.  Attention-state families
+    must actually hit; recurrent families (ssm/hybrid) must stay at zero
+    hits (their state is not token-addressable) while still serving."""
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    rng = np.random.default_rng(4)
+    shared = rng.integers(1, cfg.vocab_size, size=14)
+    prompts = [np.concatenate([shared, rng.integers(1, cfg.vocab_size,
+                                                    size=n)])
+               for n in (1, 2, 3)]
+    gens = (4, 3, 3)
+    extra = stub_context(cfg, rng, scale=0.05)     # one shared context
+    aux = -(-model.decode_state.context_tokens(cfg) // PAGE)
+
+    def _run(prefix_cache):
+        # 4 sequence pages over 2 slots: the elder's decode growth
+        # forces a youngest-first preemption mid-run
+        eng = ContinuousBatchingEngine(
+            model, params, n_slots=2, max_len=32, page_size=PAGE,
+            prefill_chunk=4, page_budget=4 + 2 * aux,
+            prefix_cache=prefix_cache)
+        rids = [eng.submit(p, g, extra=extra)
+                for p, g in zip(prompts, gens)]
+        out = eng.run()
+        return eng, [out[r] for r in rids]
+
+    cold_eng, cold = _run(False)
+    warm_eng, warm = _run(True)
+    assert sum(r.n_preemptions for r in warm_eng.requests()) >= 1
+    for c, w in zip(cold, warm):
+        np.testing.assert_array_equal(
+            c, w, err_msg=f"{family}: prefix-hit/cold token divergence")
+
+    cachable = get_adapter(cfg.family).prefix_cachable
+    assert warm_eng.prefix_cache == cachable
+    if cachable:
+        assert warm_eng.sched.prefix_hit_tokens > 0
+        assert warm_eng.stats.summary()["prefix_hit_rate"] > 0
+    else:
+        assert warm_eng.sched.prefix_hit_tokens == 0
+
+    # useful-throughput accounting: discarded (preempted) samples never
+    # inflate generated_tokens, with or without prefix sharing
+    for eng, outs in ((cold_eng, cold), (warm_eng, warm)):
+        assert eng.stats.generated_tokens == sum(len(t) for t in outs)
+    # no page leaks after a full drain: only pooled entries pin pages,
+    # and clearing the pool returns the table to empty
+    assert cold_eng.kv.table.n_used == 0
+    assert warm_eng.kv.n_active == 0
+    warm_eng.kv.clear_prefix_cache()
+    assert warm_eng.kv.table.n_used == 0
+
+
+def test_sequential_batches_reuse_prefix_across_admissions():
+    """Slots * 2 requests sharing one long prefix: the second wave is
+    admitted into recycled slots against pooled pages; outputs equal the
+    cold run's and the hit rate is substantial."""
+    cfg = reduced_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    rng = np.random.default_rng(9)
+    shared = rng.integers(1, cfg.vocab_size, size=24)
+    prompts = [np.concatenate([shared,
+                               rng.integers(1, cfg.vocab_size, size=n)])
+               for n in (3, 5, 4, 6)]
+
+    def _run(prefix_cache):
+        eng = ContinuousBatchingEngine(
+            model, params, n_slots=2, max_len=48, page_size=PAGE,
+            prefill_chunk=8, prefix_cache=prefix_cache)
+        rids = [eng.submit(p, 4) for p in prompts]
+        out = eng.run()
+        return eng, [out[r] for r in rids]
+
+    cold_eng, cold = _run(False)
+    warm_eng, warm = _run(True)
+    for c, w in zip(cold, warm):
+        np.testing.assert_array_equal(c, w)
+    # both late admissions should have skipped the 24-token prefix
+    assert warm_eng.sched.prefix_hit_tokens >= 2 * 24
+    # the copy replaces executed prefill work one for one
+    cold_prefill = sum(s.n_prefill_tokens for s in cold_eng.stats.steps)
+    warm_prefill = sum(s.n_prefill_tokens for s in warm_eng.stats.steps)
+    assert (warm_prefill + warm_eng.sched.prefix_hit_tokens
+            == cold_prefill)
