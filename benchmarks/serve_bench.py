@@ -37,6 +37,17 @@ and ``speedup_vs_nocache``.  The paper's premise makes this the
 highest-leverage serve optimization: prefill-style compute is exactly
 where RVV autovectorization is weakest, so the best prefill is the one
 the page table lets you skip.
+
+The **sharded scenario** (``--sharded``; its own
+``serve_bench_sharded.json`` artifact) runs the same workload through
+mesh-sharded continuous engines at 1 / 2 / 4 slot shards as equal
+interleaved contenders — tok/s and roofline_utilization per shard
+count, ``speedup_vs_1shard``, and each engine's resolved layout
+(rules + forced-replication decisions from ``parallel.sharding``) in
+the Report meta.  Shard counts needing more devices than the host
+exposes are skipped with a note (fake devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--sp-kv``
+uses (data x model) meshes and shards the KV sequence axis too.
 """
 from __future__ import annotations
 
@@ -50,6 +61,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.configs import reduced_config
+from repro.launch.mesh import AxisType, make_mesh
 from repro.models import build_model
 from repro.models.decode_state import stub_context
 from repro.perf.measure import measure as perf_measure
@@ -83,6 +95,15 @@ PREFIX_SCENARIO = dict(slots=4, shared_len=40, tail_band=(4, 13),
                        gen_band=(8, 17), n_req=12)
 PREFIX_SCENARIO_SMOKE = dict(slots=2, shared_len=16, tail_band=(2, 6),
                              gen_band=(3, 6), n_req=6)
+
+# sharded scenario: slot-shard counts raced as interleaved contenders
+# (slots must divide by every count that runs; counts needing more
+# devices than the host exposes are skipped with a note)
+SHARD_COUNTS = (1, 2, 4)
+SHARDED_SCENARIO = dict(slots=4, prompt_band=(8, 29), gen_band=(8, 25),
+                        n_req=12)
+SHARDED_SCENARIO_SMOKE = dict(slots=2, prompt_band=(4, 9), gen_band=(3, 6),
+                              n_req=4)
 
 
 def _workload(rng, n, p_band, g_band, vocab):
@@ -241,6 +262,85 @@ def _prefix_rows(cfg, model, params, sc: Dict, family: str = "lm"
     return rows
 
 
+def _sharded_mesh(count: int, sp_kv: bool):
+    if count == 1:
+        return None                      # the strict single-device path
+    if sp_kv:
+        return make_mesh((count, 2), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+    return make_mesh((count,), ("data",), axis_types=(AxisType.Auto,))
+
+
+def _sharded_rows(cfg, model, params, sc: Dict, family: str,
+                  sp_kv: bool = False) -> tuple[List[Dict], Dict]:
+    """One workload through mesh-sharded continuous engines at every
+    runnable shard count, as equal interleaved contenders; returns the
+    rows plus each engine's resolved-layout record for the Report meta
+    (rules + forced-replication decisions — the layout that actually
+    ran)."""
+    page = 8
+    rng = np.random.default_rng(17)
+    reqs = _workload(rng, sc["n_req"], sc["prompt_band"], sc["gen_band"],
+                     cfg.vocab_size)
+    # cross-context families: one shared stub context for the workload
+    # (per-request contexts would only change the install traffic)
+    extra = stub_context(cfg, rng)
+    max_len = -(-(max(sc["prompt_band"]) + max(sc["gen_band"])) // page) * page
+    n_dev = len(jax.devices())
+
+    def devices_needed(c):
+        # shards=1 is the strict single-device path (mesh=None, sp_kv
+        # off) — it never needs more than one device
+        return 1 if c == 1 else c * (2 if sp_kv else 1)
+
+    counts = [c for c in SHARD_COUNTS
+              if sc["slots"] % c == 0 and devices_needed(c) <= n_dev]
+    dropped = [c for c in SHARD_COUNTS if c not in counts]
+    if dropped:
+        print(f"[serve_bench] sharded: skipping shard counts {dropped} — "
+              f"{n_dev} device(s) visible; fake more with "
+              "XLA_FLAGS=--xla_force_host_platform_device_count=N")
+    engines = {
+        c: ContinuousBatchingEngine(
+            model, params, n_slots=sc["slots"], max_len=max_len,
+            page_size=page, prefill_chunk=8,
+            mesh=_sharded_mesh(c, sp_kv), sp_kv=sp_kv and c > 1)
+        for c in counts}
+
+    def _pass(eng):
+        def setup():
+            eng.reset()
+            for prompt, glen in reqs:
+                eng.submit(prompt, glen, extra=extra)
+        return (eng.run, (), setup)
+
+    ms = measure_group({f"shards={c}": _pass(e) for c, e in engines.items()},
+                       reps=REPEATS, warmup=1, jit=False)
+
+    rows, layouts = [], {}
+    base = ms["shards=1"].median_s if 1 in engines else None
+    for c, eng in engines.items():
+        m = ms[f"shards={c}"]
+        s = eng.stats.summary()          # last pass (reset per repeat)
+        rows.append({
+            "family": family, "arch": cfg.arch_id, "mix": "sharded",
+            "engine": "continuous", "shards": c, "slots": sc["slots"],
+            "requests": sc["n_req"],
+            "tok_per_s": s["generated_tokens"] / m.median_s,
+            "wall_s_median": m.median_s,
+            "wall_s_all": [round(w, 4) for w in m.all_s],
+            "generated_tokens": s["generated_tokens"],
+            "model_flops": s["model_flops"],
+            "model_bytes": s["model_bytes"],
+            "roofline_utilization": roofline_fraction(
+                s["model_flops"], s["model_bytes"], m.median_s),
+            "speedup_vs_1shard": (base / m.median_s
+                                  if base is not None else 1.0)})
+        if eng.sharding_meta is not None:
+            layouts[f"{family}/shards={c}"] = eng.sharding_meta
+    return rows, layouts
+
+
 def _mix_rows(cfg, model, params, mixes, family: str) -> List[Dict]:
     rows = []
     for name, slots, p_band, g_band, n_req in mixes:
@@ -261,9 +361,48 @@ def _mix_rows(cfg, model, params, mixes, family: str) -> List[Dict]:
 
 def run(measure: bool = True,
         families: Optional[List[str]] = None,
-        prefix_only: bool = False) -> List[Dict]:
+        prefix_only: bool = False,
+        sharded: bool = False,
+        sp_kv: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if sharded:
+        # its own artifact: the classic serve_bench.json stays a pure
+        # single-device report, and the CI smoke validates both
+        sc = SHARDED_SCENARIO_SMOKE if smoke else SHARDED_SCENARIO
+        fams = families or ["lm"]
+        if "all" in fams:
+            fams = list(FAMILY_ARCHS)
+        unknown = sorted(set(fams) - set(FAMILY_ARCHS))
+        if unknown:
+            raise SystemExit(
+                f"unknown families {unknown}; choose from "
+                f"{sorted(FAMILY_ARCHS)} or 'all'")
+        layouts: Dict[str, Dict] = {}
+        for fam in fams:
+            cfg = reduced_config(FAMILY_ARCHS[fam])
+            model = build_model(cfg)
+            params = model.init_params(jax.random.key(0))
+            r, lay = _sharded_rows(cfg, model, params, sc, fam, sp_kv=sp_kv)
+            rows += r
+            layouts.update(lay)
+        common.save_result(
+            "serve_bench_sharded", rows,
+            meta={"reduced": True, "repeats": REPEATS,
+                  "statistic": "median", "smoke": smoke, "families": fams,
+                  "sp_kv": sp_kv, "sharding": layouts})
+        common.print_table(
+            "sharded serving: slot shards over the mesh (continuous "
+            "engine, median of interleaved repeats)", rows,
+            ["family", "shards", "generated_tokens", "tok_per_s",
+             "speedup_vs_1shard", "roofline_utilization"],
+            widths={"family": 7, "speedup_vs_1shard": 18,
+                    "roofline_utilization": 21})
+        print("-> host-CPU walls over faked devices measure sharding "
+              "overhead, not speedup — on real multi-chip hardware the "
+              "slot shards decode in parallel; Report meta records each "
+              "engine's resolved layout + forced replications.")
+        return rows
     if smoke or prefix_only:
         # CI smoke (scripts/ci.sh --bench-smoke) / --prefix-only: just the
         # shared-prefix scenario at tiny shapes, through the same Report
@@ -334,6 +473,15 @@ if __name__ == "__main__":
     ap.add_argument("--prefix-only", action="store_true",
                     help="run only the shared-prefix scenario "
                          "(full shapes; REPRO_BENCH_SMOKE=1 for tiny)")
+    ap.add_argument("--sharded", action="store_true",
+                    help="run only the sharded scenario: 1/2/4 slot "
+                         "shards interleaved (writes "
+                         "serve_bench_sharded.json; REPRO_BENCH_SMOKE=1 "
+                         "for tiny shapes)")
+    ap.add_argument("--sp-kv", action="store_true",
+                    help="sharded scenario uses (data x model) meshes "
+                         "and shards the KV sequence axis too")
     args = ap.parse_args()
     run(families=args.families.split(",") if args.families else None,
-        prefix_only=args.prefix_only)
+        prefix_only=args.prefix_only, sharded=args.sharded,
+        sp_kv=args.sp_kv)

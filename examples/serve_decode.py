@@ -8,6 +8,12 @@ install: each request carries its own image / audio context.
   PYTHONPATH=src python examples/serve_decode.py --arch granite-3-2b
   PYTHONPATH=src python examples/serve_decode.py --arch mamba2-780m
   PYTHONPATH=src python examples/serve_decode.py --arch whisper-base
+
+Sharded serving (slot axis over the mesh's data axis; fake the devices
+on CPU):
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+      PYTHONPATH=src python examples/serve_decode.py --mesh 2 --slots 4
 """
 import argparse
 
@@ -15,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs import ARCH_IDS, reduced_config
+from repro.launch.mesh import parse_mesh
 from repro.models import build_model
 from repro.models.decode_state import stub_context
 from repro.perf.measure import now
@@ -33,17 +40,28 @@ def main():
     ap.add_argument("--prefix-cache", action="store_true",
                     help="reuse shared page-aligned prompt prefixes "
                          "from released requests' pooled pages")
+    ap.add_argument("--mesh", default=None,
+                    help="shard the decode slots over a device mesh: "
+                         "N (data) / NxM (data x model); fake devices "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N")
+    ap.add_argument("--sp-kv", action="store_true",
+                    help="also shard the KV-cache sequence axis over "
+                         "'model' (needs NxM mesh)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
     model = build_model(cfg)
     params = model.init_params(jax.random.key(0))
+    mesh = parse_mesh(args.mesh)
     engine = ContinuousBatchingEngine(
         model, params, n_slots=args.slots, max_len=args.max_len,
         page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-        prefix_cache=args.prefix_cache)
+        prefix_cache=args.prefix_cache, mesh=mesh, sp_kv=args.sp_kv)
     print(f"family={cfg.family}: continuous batching via DecodeState"
-          + (" + prefix cache" if engine.prefix_cache else ""))
+          + (" + prefix cache" if engine.prefix_cache else "")
+          + (f" + {engine.n_shards} slot shard(s) over mesh "
+             f"{engine.sharding_meta['mesh']}" if mesh is not None else ""))
 
     # mixed workload: a shared system-prompt prefix (so --prefix-cache
     # has something to hit) + per-request tails of 5..29 tokens,

@@ -35,6 +35,11 @@ PY
     # runs only that scenario at tiny shapes under REPRO_BENCH_SMOKE=1);
     # every produced artifact is then schema-validated
     REPRO_BENCH_SMOKE=1 python -m benchmarks.run --only table1_counters,serve_bench
+    # sharded serve scenario on a forced 2-device host: 1 vs 2 slot
+    # shards interleaved at tiny shapes, written to its own
+    # serve_bench_sharded.json artifact (validated with the rest)
+    XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+        REPRO_BENCH_SMOKE=1 python -m benchmarks.serve_bench --sharded
     python -m repro.perf --validate benchmarks/results
     exit 0
 fi

@@ -65,6 +65,36 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
                      devices=devices[:n])
 
 
+def parse_mesh(spec: Optional[str]) -> Optional[Mesh]:
+    """CLI mesh spec -> Mesh (or None for the single-device no-op path).
+
+    ``"2"`` -> (data=2); ``"2x4"`` -> (data=2, model=4);
+    ``"2x4x4"`` -> (pod=2, data=4, model=4) — axis names follow the
+    production layout so the default sharding rules (slot axis over
+    ("pod", "data"), tensor/SP-KV over "model") apply unchanged.
+    ``None`` / ``""`` / ``"none"`` / ``"1"`` select no mesh: serving
+    stays on the single-device path (a strict no-op, not a 1-device
+    mesh).
+    """
+    if spec is None or spec.lower() in ("", "none", "1"):
+        return None
+    try:
+        dims = tuple(int(d) for d in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"bad mesh spec {spec!r}: want N, NxM, or NxMxK")
+    names = {1: ("data",), 2: ("data", "model"),
+             3: ("pod", "data", "model")}.get(len(dims))
+    if names is None or any(d < 1 for d in dims):
+        raise ValueError(f"bad mesh spec {spec!r}: want N, NxM, or NxMxK")
+    n = math.prod(dims)
+    if n > len(jax.devices()):
+        raise RuntimeError(
+            f"mesh {spec} needs {n} devices; have {len(jax.devices())} — "
+            f"set XLA_FLAGS=--xla_force_host_platform_device_count={n} "
+            "before jax is imported to fake them on CPU")
+    return make_mesh(dims, names, axis_types=(AxisType.Auto,) * len(dims))
+
+
 def make_host_mesh(model: int = 1) -> Mesh:
     """A small mesh over whatever devices exist (tests / examples)."""
     n = len(jax.devices())

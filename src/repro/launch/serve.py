@@ -6,6 +6,12 @@
 Every family (lm / ssm / hybrid / vlm / audio) runs the continuous-
 batching engine via the DecodeState protocol; ``--static`` selects the
 fixed-batch StaticBatchEngine baseline instead.
+
+``--mesh 2`` / ``--mesh 2x2`` / ``--mesh 2x16x16`` serves sharded: the
+decode slot axis lays out over ("pod", "data"), tensor parallelism over
+"model", and ``--sp-kv`` additionally shards the KV-cache sequence axis
+(flash-decoding).  On a CPU host fake the devices with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config, reduced_config
+from repro.launch.mesh import parse_mesh
 from repro.models import build_model
 from repro.models.decode_state import stub_context
 from repro.models.quant import quantize_params
@@ -46,6 +53,14 @@ def main():
                     help="max pooled prefix entries (LRU bound)")
     ap.add_argument("--static", action="store_true",
                     help="fixed-batch StaticBatchEngine baseline")
+    ap.add_argument("--mesh", default=None,
+                    help="device mesh for sharded serving: N (data), "
+                         "NxM (data x model) or NxMxK (pod x data x "
+                         "model); decode slots shard over (pod, data)")
+    ap.add_argument("--sp-kv", action="store_true",
+                    help="also shard the KV-cache sequence axis over "
+                         "'model' (sequence-parallel flash-decoding); "
+                         "needs a mesh with a model axis")
     args = ap.parse_args()
 
     cfg = (reduced_config(args.arch) if args.reduced
@@ -82,13 +97,24 @@ def main():
 
     page = args.page_size
     max_len = -(-max_len // page) * page                  # round up to pages
+    mesh = parse_mesh(args.mesh)
+    if args.sp_kv and (mesh is None or "model" not in mesh.shape):
+        raise SystemExit("--sp-kv needs --mesh with a model axis "
+                         "(e.g. --mesh 2x2)")
     engine = ContinuousBatchingEngine(
         model, params, n_slots=args.slots, max_len=max_len,
         page_size=page, prefill_chunk=args.prefill_chunk,
-        prefix_cache=args.prefix_cache, prefix_pool=args.prefix_pool)
+        prefix_cache=args.prefix_cache, prefix_pool=args.prefix_pool,
+        mesh=mesh, sp_kv=args.sp_kv)
     if args.prefix_cache and not engine.prefix_cache:
         print(f"[serve] family {cfg.family!r} has non-token-addressable "
               "(recurrent) decode state; prefix cache disabled")
+    if mesh is not None:
+        sm = engine.sharding_meta
+        print(f"[serve] mesh {sm['mesh']}: {engine.n_shards} slot "
+              f"shard(s), sp_kv={sm['sp_kv']}"
+              + (f"; forced replication: {sm['forced_replication']}"
+                 if sm["forced_replication"] else ""))
     for _ in range(n_req):
         plen = int(rng.integers(max(1, args.prompt_len // 2),
                                 args.prompt_len + 1))

@@ -410,10 +410,9 @@ def attn_decode(params, x, cfg, *, positions, cache, n_valid=None):
         k = layers.apply_rope(k, positions, cfg.rope_theta)
     kv_axes = rule_axes("kv_seq")
     if kv_axes:
-        assert n_valid is None, "n_valid unsupported on the SP-KV path"
         return _attn_decode_spkv(params, q, k, v, cfg,
                                  positions=positions, cache=cache,
-                                 axis=kv_axes[0])
+                                 axis=kv_axes[0], n_valid=n_valid)
     q, k, v = _constrain_qkv(q, k, v)
     pos = cache["pos"]                                    # (B,)
     S_cache = cache["k"].shape[1]
@@ -433,7 +432,8 @@ def attn_decode(params, x, cfg, *, positions, cache, n_valid=None):
     return _out_proj(params, out, cfg), new_cache
 
 
-def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis):
+def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis,
+                      n_valid=None):
     """Sequence-parallel decode: cache length sharded over ``axis``.
 
     Per shard: scatter the new K/V into the locally-owned slice (index
@@ -441,6 +441,13 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis):
     partial online-softmax over the local cache slice, then combine the
     (m, l, acc) triple across shards — O(B*NQ*H) bytes instead of
     all-gathering the O(B*S*NKV*H) cache.
+
+    ``n_valid`` (B,) follows the same ragged-write contract as the
+    unsharded decode (serving engine mixed steps): cache scatters for
+    columns past a row's count are dropped, the valid-length mask closes
+    over ``pos + n_valid``, and the position advances by ``n_valid``.
+    Rows with ``n_valid == 0`` see an all-masked score matrix — NEG_INF
+    is a finite constant, so their (discarded) outputs stay NaN-free.
     """
     from jax.sharding import PartitionSpec as P
     from repro.core.compat import shard_map
@@ -455,13 +462,17 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis):
     kv_new = P(bax, None, None, None)
     cache_s = P(bax, axis, None, None)
     pos_s = P(bax)
+    step = (jnp.full((q.shape[0],), q.shape[1], jnp.int32)
+            if n_valid is None else n_valid)
 
-    def body(q, k_new, v_new, kc, vc, pos, positions):
+    def body(q, k_new, v_new, kc, vc, pos, positions, step):
         i = jax.lax.axis_index(axis)
         S_shard = kc.shape[1]
         offset = i * S_shard
-        # local scatter (out-of-shard indices drop)
+        # local scatter (out-of-shard and past-n_valid indices drop)
         idx = pos[:, None] + jnp.arange(q.shape[1])[None] - offset
+        idx = jnp.where(jnp.arange(q.shape[1])[None] < step[:, None],
+                        idx, S_shard)
         kc = jax.vmap(lambda c, u, ii: c.at[ii].set(u, mode="drop"))(
             kc, k_new.astype(kc.dtype), idx)
         vc = jax.vmap(lambda c, u, ii: c.at[ii].set(u, mode="drop"))(
@@ -479,7 +490,7 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis):
             s = softcap * jnp.tanh(s / softcap)
         kv_pos = offset + jnp.arange(S_shard)[None, None, None, :]
         mask = kv_pos <= positions[:, None, :, None]
-        mask &= kv_pos < (pos + Sq)[:, None, None, None]
+        mask &= kv_pos < (pos + step)[:, None, None, None]
         s = jnp.where(mask, s, NEG_INF)
         m_loc = jnp.max(s, axis=-1)                       # (B,NQ,Sq)
         p = jnp.exp(s - m_loc[..., None])
@@ -496,11 +507,11 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis):
 
     out, kc, vc = shard_map(
         body, mesh=mesh,
-        in_specs=(qs, kv_new, kv_new, cache_s, cache_s, pos_s, pos_s),
+        in_specs=(qs, kv_new, kv_new, cache_s, cache_s, pos_s, pos_s, pos_s),
         out_specs=(qs, cache_s, cache_s),
         check=False,
-    )(q, k, v, cache["k"], cache["v"], cache["pos"], positions)
-    new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + q.shape[1]}
+    )(q, k, v, cache["k"], cache["v"], cache["pos"], positions, step)
+    new_cache = {"k": kc, "v": vc, "pos": cache["pos"] + step}
     return _out_proj(params, out, cfg), new_cache
 
 

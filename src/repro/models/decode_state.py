@@ -26,6 +26,19 @@ step leaves idle, preempted, or finished rows' state untouched.
 ``context_tokens(cfg)`` reports the per-slot read-only context length
 (image tokens / audio frames) so the paged cache can account the pages
 that context pins for the slot's lifetime.
+
+**Sharding contract**: the same spec tuples double as the state's
+sharding layout.  Every leaf's ``"batch"`` axis is the decode *slot*
+axis; under the mesh-sharded serving engine it maps to the production
+mesh's ``("pod", "data")`` axes (``parallel.axes.DEFAULT_RULES``) and
+``"kv_seq"`` optionally to ``"model"`` (SP-KV).  The generic primitives
+stay correct with a sharded slot axis — ``dynamic_slice`` /
+``dynamic_update_slice`` / masked ``where`` lower to the owning shard
+under GSPMD — and every primitive that *returns* full state re-asserts
+the resolved leaf layout (``constrain_state``) so donated buffers keep
+their ``NamedSharding`` across steps.  Without an active sharding
+context the constraint is the identity, so single-device serving is
+bitwise unchanged.
 """
 from __future__ import annotations
 
@@ -51,6 +64,26 @@ def batch_axes(state: Params, specs: Params):
     return leaves, treedef, [s.index("batch") for s in spec_leaves]
 
 
+def constrain_state(state: Params, specs: Params) -> Params:
+    """Re-assert every leaf's resolved sharding from its axis-name spec.
+
+    The write half of the sharded DecodeState contract: primitives that
+    rebuild whole-state leaves (row insert, slot reset, prefix copy)
+    pass their output through this so the slotted state keeps its
+    ``NamedSharding`` layout across jitted steps instead of drifting to
+    whatever GSPMD infers.  A no-op (identity, same leaves) when no
+    sharding context is active — the single-device engine never pays."""
+    from repro.parallel import axes as _axes
+
+    if not _axes.active():
+        return state
+    leaves, treedef = jax.tree.flatten(state)
+    spec_leaves = treedef.flatten_up_to(specs)
+    return jax.tree.unflatten(
+        treedef, [_axes.constrain(leaf, *spec)
+                  for leaf, spec in zip(leaves, spec_leaves)])
+
+
 def state_row(state: Params, specs: Params, slot) -> Params:
     """Extract batch row ``slot`` as a batch-1 state — the read half of
     the paged cache's slot-indexed update.  jit-compatible (``slot`` may
@@ -69,7 +102,7 @@ def set_state_row(state: Params, specs: Params, slot, row: Params) -> Params:
     out = [jax.lax.dynamic_update_slice_in_dim(l, r.astype(l.dtype),
                                                slot, axis=ax)
            for l, r, ax in zip(leaves, row_leaves, axes)]
-    return jax.tree.unflatten(treedef, out)
+    return constrain_state(jax.tree.unflatten(treedef, out), specs)
 
 
 def copy_state_prefix(state: Params, specs: Params, src_slot, dst_slot,
@@ -118,7 +151,7 @@ def copy_state_prefix(state: Params, specs: Params, src_slot, dst_slot,
                 leaf, row, dst_slot, axis=bax))
         else:
             out.append(leaf)
-    return jax.tree.unflatten(treedef, out)
+    return constrain_state(jax.tree.unflatten(treedef, out), specs)
 
 
 def reset_state_slots(state: Params, specs: Params,
@@ -134,8 +167,8 @@ def reset_state_slots(state: Params, specs: Params,
         m = slot_mask.reshape(shape)
         return jnp.where(m, jnp.zeros((), leaf.dtype), leaf)
 
-    return jax.tree.unflatten(
-        treedef, [reset(l, ax) for l, ax in zip(leaves, axes)])
+    return constrain_state(jax.tree.unflatten(
+        treedef, [reset(l, ax) for l, ax in zip(leaves, axes)]), specs)
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ replication for the roofline report.
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Any, Dict, List, Optional
 
 from jax.sharding import Mesh
 
@@ -56,3 +56,26 @@ def rules_for(cfg: ModelConfig, mesh: Mesh, *, sp_kv: bool = False) -> Rules:
         rules["kv_seq"] = "model"
 
     return rules
+
+
+def layout_report(mesh: Mesh, rules: Rules, decisions: List[str], *,
+                  n_shards: Optional[int] = None,
+                  sp_kv: bool = False) -> Dict[str, Any]:
+    """JSONable record of a resolved sharding layout for benchmark
+    Report metadata.
+
+    ``decisions`` is the forced-replication log collected by
+    ``axes.resolve_spec`` while a sharding context was active (e.g.
+    "replicated logical axis 'kv_heads' (dim 10) — not divisible by mesh
+    axes ('model',) (size 16)").  Surfacing it next to the rule set means
+    a sharded ``serve_bench`` artifact records the layout that *actually
+    ran*, not just the one that was requested — the resolver's
+    portable-performance posture made auditable."""
+    return {
+        "mesh": {name: int(size) for name, size in mesh.shape.items()},
+        "rules": {k: (list(v) if isinstance(v, tuple) else v)
+                  for k, v in rules.items()},
+        "forced_replication": list(decisions),
+        **({} if n_shards is None else {"slot_shards": int(n_shards)}),
+        "sp_kv": bool(sp_kv),
+    }

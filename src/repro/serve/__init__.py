@@ -54,9 +54,41 @@ keyed on the page table:
     whose state is not token-addressable (ssm / hybrid recurrent state)
     declare ``prefix_cachable = False`` and run with the cache off.
 
-It unblocks the remaining serve roadmap: sharded decode slots can share
-pooled prefix pages per shard, and async request intake can match
-prefixes at enqueue time (before a slot even frees).
+**Sharded serving** (``ContinuousBatchingEngine(mesh=...)``): the
+decode slot ("batch") axis lays out over the production mesh's
+``("pod", "data")`` axes and the whole subsystem partitions with it.
+The sharding contract a family's adapter already satisfies by
+construction:
+
+  * *which leaves carry slot-axis specs* — every leaf of the adapter's
+    state pytree names ``"batch"`` in its spec tuple; that same tuple
+    is the leaf's sharding layout (``parallel.axes`` resolves it
+    against the active rules, dropping non-divisible axes and recording
+    the forced replication).  ``"kv_seq"`` leaves may additionally
+    shard over ``"model"`` (``sp_kv=True`` — the flash-decoding
+    combine in attention);
+  * the generic row primitives (``state_row`` / ``set_state_row`` /
+    ``reset_state_slots`` / ``copy_state_prefix``) address rows inside
+    the sharded slot axis (GSPMD lowers the dynamic slices to the
+    owning shard) and re-assert the resolved layout on every full-state
+    output (``decode_state.constrain_state``) so donated buffers keep
+    their ``NamedSharding`` across steps;
+  * *what a shard-local scheduler guarantees* — slots split into
+    contiguous shard blocks matching the device layout; each shard owns
+    its own page-table budget and prefix pool; admission ranks shards
+    by longest shard-local prefix match then free pages; a blocked
+    growth preempts only within the stalled slot's shard; and a prefix
+    donor is always in the admitted slot's shard, so the donor-row copy
+    never crosses a device block.  A single-device engine (``mesh=None``)
+    is bitwise unchanged.
+
+A new family therefore gets sharded serving for free: correct spec
+tuples are the entire contract.
+
+It unblocks the remaining serve roadmap: async request intake can match
+prefixes at enqueue time (before a slot even frees), per-shard intake
+queues can feed the admission ranking, and batched multi-row prefill
+chunks can amortize the per-chunk dispatch.
 
 ``StaticBatchEngine`` remains the run-to-completion baseline used by the
 per-family temperature-0 parity tests and benchmarks/serve_bench.py;

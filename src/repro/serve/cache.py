@@ -40,6 +40,19 @@ the occupancy metrics the engine reports, and the **prefix cache**:
   * pooled pages are reclaimed (LRU-first eviction) the moment a real
     allocation would otherwise fail, so the pool only ever uses spare
     capacity and never blocks admission or decode growth.
+
+**Slot shards** (``n_shards > 1``): when the serving engine shards the
+slot ("batch") axis over a device mesh, the page budget and the prefix
+pool partition with it.  Slots split into ``n_shards`` contiguous blocks
+(matching ``NamedSharding``'s contiguous block layout of the batch
+axis), each shard owns its own :class:`PageTable` (``budget /
+n_shards`` pages) and its own prefix-pool LRU, and every operation that
+names a slot (grow / release / cache_prefix) stays inside that slot's
+shard.  Admission and prefix matching take an explicit ``shard``; a
+donor row and the slot admitted against it therefore always live on the
+same device block, so the engine's prefix copy never crosses a shard
+boundary.  ``n_shards=1`` (the default) is bit-for-bit the unsharded
+behavior.
 """
 from __future__ import annotations
 
@@ -166,19 +179,30 @@ class PagedKVCache:
     so an oversubscribed budget sees the true per-request footprint.
 
     ``prefix_pool`` > 0 enables the prefix cache: up to that many
-    released prefix entries are retained (LRU) for page-aligned prompt
-    reuse; 0 (the default) disables it entirely.
+    released prefix entries are retained (LRU, per shard) for
+    page-aligned prompt reuse; 0 (the default) disables it entirely.
+
+    ``n_shards`` > 1 partitions slots, page budget, and prefix pool into
+    contiguous slot-shard blocks (see module docstring); both must
+    divide evenly so every shard is identical.
     """
 
     def __init__(self, n_slots: int, max_len: int, page_size: int = 16,
                  page_budget: Optional[int] = None,
                  slot_aux_tokens: int = 0,
-                 prefix_pool: int = 0):
+                 prefix_pool: int = 0,
+                 n_shards: int = 1):
         if max_len % page_size:
             raise ValueError(
                 f"max_len {max_len} must be a multiple of page_size "
                 f"{page_size}")
+        if n_shards < 1 or n_slots % n_shards:
+            raise ValueError(
+                f"n_slots {n_slots} must split evenly over n_shards "
+                f"{n_shards} (the slot axis shards into equal blocks)")
         self.n_slots = n_slots
+        self.n_shards = n_shards
+        self.slots_per_shard = n_slots // n_shards
         self.max_len = max_len
         self.page_size = page_size
         self.pages_per_slot = max_len // page_size
@@ -186,15 +210,47 @@ class PagedKVCache:
         self.aux_pages_per_slot = -(-slot_aux_tokens // page_size)
         budget = (n_slots * (self.pages_per_slot + self.aux_pages_per_slot)
                   if page_budget is None else page_budget)
-        self.table = PageTable(budget, page_size)
+        if budget % n_shards:
+            raise ValueError(
+                f"page_budget {budget} must split evenly over n_shards "
+                f"{n_shards} (each slot shard owns its own page table)")
+        self.tables: List[PageTable] = [
+            PageTable(budget // n_shards, page_size) for _ in range(n_shards)]
         self.slots: Dict[int, SlotInfo] = {}
-        # -- prefix cache ------------------------------------------------
+        # -- prefix cache (one pool per shard) ---------------------------
         self.prefix_pool = prefix_pool
-        self._prefix_lru: "OrderedDict[int, PrefixEntry]" = OrderedDict()
-        self._prefix_index: Dict[bytes, int] = {}     # boundary hash -> eid
+        self._prefix_lru: List["OrderedDict[int, PrefixEntry]"] = [
+            OrderedDict() for _ in range(n_shards)]
+        self._prefix_index: List[Dict[bytes, int]] = [
+            {} for _ in range(n_shards)]              # boundary hash -> eid
         self._slot_entries: Dict[int, set] = {}       # donor slot -> {eid}
         self._next_eid = 0
         self.prefix_evictions = 0
+
+    # -- shards ----------------------------------------------------------
+    def shard_of(self, slot: int) -> int:
+        """Slot-shard owning ``slot`` (contiguous blocks, matching the
+        device layout of a NamedSharding over the batch axis)."""
+        return slot // self.slots_per_shard
+
+    @property
+    def table(self) -> PageTable:
+        """Shard 0's page table — the whole table when ``n_shards == 1``
+        (the common case and the unsharded engines' view)."""
+        return self.tables[0]
+
+    @property
+    def page_budget(self) -> int:
+        """Total pages across every shard's table."""
+        return sum(t.n_pages for t in self.tables)
+
+    def free_pages_in(self, shard: int) -> int:
+        return self.tables[shard].n_free
+
+    def free_slots_in(self, shard: int) -> List[int]:
+        lo = shard * self.slots_per_shard
+        return [s for s in range(lo, lo + self.slots_per_shard)
+                if s not in self.slots]
 
     # -- slots ----------------------------------------------------------
     @property
@@ -210,17 +266,20 @@ class PagedKVCache:
         return self.n_active / self.n_slots
 
     def page_utilization(self) -> float:
-        return self.table.n_used / self.table.n_pages
+        return (sum(t.n_used for t in self.tables)
+                / sum(t.n_pages for t in self.tables))
 
     # -- prefix cache ----------------------------------------------------
     @property
     def n_prefix_entries(self) -> int:
-        return len(self._prefix_lru)
+        return sum(len(lru) for lru in self._prefix_lru)
 
     @property
     def prefix_pages(self) -> int:
-        """Distinct pages currently pinned by pooled prefix entries."""
-        return len({p for e in self._prefix_lru.values() for p in e.pages})
+        """Pages currently pinned by pooled prefix entries (summed over
+        shards; page ids are per-shard, so distinctness is per shard)."""
+        return sum(len({p for e in lru.values() for p in e.pages})
+                   for lru in self._prefix_lru)
 
     def _hash_chain(self, tokens: Sequence[int],
                     ctx_key: Optional[bytes]) -> List[bytes]:
@@ -250,70 +309,74 @@ class PagedKVCache:
 
     def match_prefix(self, prompt: Sequence[int],
                      ctx_key: Optional[bytes] = None,
-                     keys: Optional[List[bytes]] = None
-                     ) -> tuple[int, Optional[PrefixEntry]]:
-        """Longest cached page-aligned prefix of ``prompt``.  Read-only:
-        the LRU touch happens when an admission actually consumes the
-        entry (``admit``), not on every blocked attempt."""
-        if not self.prefix_pool or not self._prefix_lru:
+                     keys: Optional[List[bytes]] = None,
+                     shard: int = 0) -> tuple[int, Optional[PrefixEntry]]:
+        """Longest page-aligned prefix of ``prompt`` cached in ``shard``'s
+        pool (donor rows of other shards live on other devices, so only
+        shard-local entries are usable).  Read-only: the LRU touch
+        happens when an admission actually consumes the entry
+        (``admit``), not on every blocked attempt."""
+        if not self.prefix_pool or not self._prefix_lru[shard]:
             return 0, None
         if keys is None:
             keys = self.prefix_keys(prompt, ctx_key)
         for i in range(len(keys), 0, -1):
-            eid = self._prefix_index.get(keys[i - 1])
+            eid = self._prefix_index[shard].get(keys[i - 1])
             if eid is not None:
-                return i * self.page_size, self._prefix_lru[eid]
+                return i * self.page_size, self._prefix_lru[shard][eid]
         return 0, None
 
     def cache_prefix(self, slot: int, tokens: Sequence[int],
                      ctx_key: Optional[bytes] = None) -> Optional[PrefixEntry]:
         """Retain the page-aligned prefix of an active slot's committed
-        prompt ``tokens`` in the pool.  Call *before* ``release``: the
-        entry takes its own reference on the prefix pages, so the
-        subsequent release leaves them pinned."""
+        prompt ``tokens`` in the slot's shard pool.  Call *before*
+        ``release``: the entry takes its own reference on the prefix
+        pages, so the subsequent release leaves them pinned."""
         if not self.prefix_pool:
             return None
         n_pages = len(tokens) // self.page_size
         if n_pages == 0:
             return None
+        shard = self.shard_of(slot)
+        lru, index = self._prefix_lru[shard], self._prefix_index[shard]
         length = n_pages * self.page_size
         keys = self._hash_chain(np.asarray(tokens)[:length], ctx_key)
-        if keys[-1] in self._prefix_index:                 # exact duplicate
-            self._prefix_lru.move_to_end(self._prefix_index[keys[-1]])
+        if keys[-1] in index:                              # exact duplicate
+            lru.move_to_end(index[keys[-1]])
             return None
         info = self.slots[slot]
         pages = list(info.pages[:n_pages])
-        self.table.incref(pages)
+        self.tables[shard].incref(pages)
         eid = self._next_eid
         self._next_eid += 1
         entry = PrefixEntry(eid=eid, slot=slot, length=length,
                             pages=pages, keys=keys)
-        self._prefix_lru[eid] = entry
+        lru[eid] = entry
         shadowed = set()
         for k in keys:
-            prev = self._prefix_index.get(k)
+            prev = index.get(k)
             if prev is not None:
                 shadowed.add(prev)
-            self._prefix_index[k] = eid                    # newest wins
+            index[k] = eid                                 # newest wins
         self._slot_entries.setdefault(slot, set()).add(eid)
         # an older entry whose every key now resolves to the new superset
         # entry can never match again — evict it eagerly rather than let
         # it pin pages and a pool slot until it ages out of the LRU
         for prev in shadowed:
-            old = self._prefix_lru.get(prev)
+            old = lru.get(prev)
             if old is not None and not any(
-                    self._prefix_index.get(k) == prev for k in old.keys):
-                self._evict(prev)
-        while len(self._prefix_lru) > self.prefix_pool:
-            self._evict_lru()
+                    index.get(k) == prev for k in old.keys):
+                self._evict(prev, shard)
+        while len(lru) > self.prefix_pool:
+            self._evict_lru(shard)
         return entry
 
-    def _evict(self, eid: int) -> None:
-        entry = self._prefix_lru.pop(eid)
-        self.table.free(entry.pages)
+    def _evict(self, eid: int, shard: int) -> None:
+        entry = self._prefix_lru[shard].pop(eid)
+        self.tables[shard].free(entry.pages)
         for k in entry.keys:
-            if self._prefix_index.get(k) == eid:
-                del self._prefix_index[k]
+            if self._prefix_index[shard].get(k) == eid:
+                del self._prefix_index[shard][k]
         owners = self._slot_entries.get(entry.slot)
         if owners is not None:
             owners.discard(eid)
@@ -321,74 +384,86 @@ class PagedKVCache:
                 del self._slot_entries[entry.slot]
         self.prefix_evictions += 1
 
-    def _evict_lru(self) -> None:
-        self._evict(next(iter(self._prefix_lru)))
+    def _evict_lru(self, shard: int) -> None:
+        self._evict(next(iter(self._prefix_lru[shard])), shard)
 
-    def _reclaim(self, need: int, keep: frozenset = frozenset()) -> None:
-        """Evict pooled prefixes (LRU-first) until ``need`` pages can be
-        allocated — the pool uses spare capacity only and never starves a
-        real allocation.  Eviction only happens when it can actually
-        enable the allocation: pages shared with active slots are not
-        recoverable (freeing the pool ref leaves them pinned), so if
-        ``need`` exceeds free + recoverable pages, nothing is evicted and
-        the hit potential survives the failed attempt.  Pages shared only
-        *between* pooled entries are recovered by cascading evictions."""
-        while not self.table.can_alloc(need):
+    def _reclaim(self, need: int, keep: frozenset = frozenset(),
+                 shard: int = 0) -> None:
+        """Evict ``shard``'s pooled prefixes (LRU-first) until ``need``
+        pages can be allocated — the pool uses spare capacity only and
+        never starves a real allocation.  Eviction only happens when it
+        can actually enable the allocation: pages shared with active
+        slots are not recoverable (freeing the pool ref leaves them
+        pinned), so if ``need`` exceeds free + recoverable pages, nothing
+        is evicted and the hit potential survives the failed attempt.
+        Pages shared only *between* pooled entries are recovered by
+        cascading evictions."""
+        table, lru = self.tables[shard], self._prefix_lru[shard]
+        while not table.can_alloc(need):
             pooled_refs: Dict[int, int] = {}
-            for eid, entry in self._prefix_lru.items():
+            for eid, entry in lru.items():
                 if eid in keep:
                     continue
                 for p in entry.pages:
                     pooled_refs[p] = pooled_refs.get(p, 0) + 1
             recoverable = {p for p, r in pooled_refs.items()
-                           if r == self.table.refcount(p)}
-            if self.table.n_free + len(recoverable) < need:
+                           if r == table.refcount(p)}
+            if table.n_free + len(recoverable) < need:
                 return
-            victim = next(eid for eid, e in self._prefix_lru.items()
+            victim = next(eid for eid, e in lru.items()
                           if eid not in keep
                           and any(p in recoverable for p in e.pages))
-            self._evict(victim)
+            self._evict(victim, shard)
 
     def clear_prefix_cache(self) -> None:
         """Drop every pooled entry (frees all entry-held page refs)."""
-        for eid in list(self._prefix_lru):
-            self._evict(eid)
+        for shard, lru in enumerate(self._prefix_lru):
+            for eid in list(lru):
+                self._evict(eid, shard)
 
     # -- lifecycle ------------------------------------------------------
     def can_admit(self, first_chunk: int, *, prefix_len: int = 0,
                   prefix_entry: Optional[PrefixEntry] = None,
-                  exclude: frozenset = frozenset()) -> bool:
-        """True when a request could be admitted now — with ``first_chunk``
-        fresh prompt tokens on top of an optional ``prefix_len``-token
-        shared prefix.  Reclaims pooled pages as needed (never the entry
-        being matched); ``exclude`` removes slots from consideration
-        (in-flight prefix donors whose device rows must stay intact)."""
+                  exclude: frozenset = frozenset(),
+                  shard: int = 0) -> bool:
+        """True when a request could be admitted into ``shard`` now —
+        with ``first_chunk`` fresh prompt tokens on top of an optional
+        ``prefix_len``-token shared prefix.  Reclaims the shard's pooled
+        pages as needed (never the entry being matched); ``exclude``
+        removes slots from consideration (in-flight prefix donors whose
+        device rows must stay intact)."""
+        table = self.tables[shard]
         shared = 0 if prefix_entry is None else prefix_len // self.page_size
-        need = (self.table.pages_for(prefix_len + first_chunk) - shared
+        need = (table.pages_for(prefix_len + first_chunk) - shared
                 + self.aux_pages_per_slot)
-        if not [s for s in self.free_slots if s not in exclude]:
+        if not [s for s in self.free_slots_in(shard) if s not in exclude]:
             return False
         keep = (frozenset() if prefix_entry is None
                 else frozenset((prefix_entry.eid,)))
-        self._reclaim(need, keep)
-        return self.table.can_alloc(need)
+        self._reclaim(need, keep, shard)
+        return table.can_alloc(need)
 
     def admit(self, first_chunk: int, *, prefix_len: int = 0,
               prefix_entry: Optional[PrefixEntry] = None,
-              exclude: frozenset = frozenset()) -> int:
-        """Claim a free slot with pages for the first prompt chunk plus
-        the slot's lifetime aux-state (context) pages.
+              exclude: frozenset = frozenset(),
+              shard: int = 0) -> int:
+        """Claim a free slot in ``shard`` with pages for the first prompt
+        chunk plus the slot's lifetime aux-state (context) pages.
 
         With a prefix match, the entry's pages covering ``prefix_len``
         tokens are *shared* (incref) rather than allocated, and the slot
-        starts with ``prefix_len`` committed tokens.  The chunk + aux
-        pages come from one combined allocation, so a failed admission
-        can never leak the chunk pages when the aux tail does not fit.
+        starts with ``prefix_len`` committed tokens.  The matched entry
+        must live in the same shard (its donor row is device-local to
+        the shard's slot block).  The chunk + aux pages come from one
+        combined allocation, so a failed admission can never leak the
+        chunk pages when the aux tail does not fit.
         """
         if not self.can_admit(first_chunk, prefix_len=prefix_len,
-                              prefix_entry=prefix_entry, exclude=exclude):
+                              prefix_entry=prefix_entry, exclude=exclude,
+                              shard=shard):
             raise RuntimeError("no free slot / pages for admission")
-        free = [s for s in self.free_slots if s not in exclude]
+        table, lru = self.tables[shard], self._prefix_lru[shard]
+        free = [s for s in self.free_slots_in(shard) if s not in exclude]
         # prefer a slot not holding pooled prefix rows; else reuse the
         # matched donor in place (evicts only the entry being consumed);
         # else claim the slot whose entries we must drop anyway
@@ -403,14 +478,14 @@ class PagedKVCache:
                   else list(prefix_entry.pages[:prefix_len // self.page_size]))
         # take our reference on the shared pages BEFORE evicting the
         # entries on the claimed slot (the matched entry may live there)
-        self.table.incref(shared)
-        if prefix_entry is not None and prefix_entry.eid in self._prefix_lru:
-            self._prefix_lru.move_to_end(prefix_entry.eid)  # LRU touch on use
+        table.incref(shared)
+        if prefix_entry is not None and prefix_entry.eid in lru:
+            lru.move_to_end(prefix_entry.eid)  # LRU touch on use
         for eid in list(self._slot_entries.get(slot, ())):
-            self._evict(eid)                   # claimed slot rows are dead
-        need = (self.table.pages_for(prefix_len + first_chunk) - len(shared)
+            self._evict(eid, shard)            # claimed slot rows are dead
+        need = (table.pages_for(prefix_len + first_chunk) - len(shared)
                 + self.aux_pages_per_slot)
-        newly = self.table.alloc(need)         # atomic: chunk + aux together
+        newly = table.alloc(need)              # atomic: chunk + aux together
         split = need - self.aux_pages_per_slot
         self.slots[slot] = SlotInfo(pages=shared + newly[:split],
                                     length=prefix_len,
@@ -418,19 +493,22 @@ class PagedKVCache:
         return slot
 
     def grow(self, slot: int, n_tokens: int) -> bool:
-        """Commit ``n_tokens`` more tokens to ``slot``, allocating pages as
-        the sequence crosses page boundaries.  Returns False (state
-        unchanged) if the page budget or slot capacity cannot cover it."""
+        """Commit ``n_tokens`` more tokens to ``slot``, allocating pages
+        from the slot's shard as the sequence crosses page boundaries.
+        Returns False (state unchanged) if the page budget or slot
+        capacity cannot cover it."""
         info = self.slots[slot]
+        shard = self.shard_of(slot)
+        table = self.tables[shard]
         new_len = info.length + n_tokens
         if new_len > self.max_len:
             return False
-        need = self.table.pages_for(new_len) - len(info.pages)
+        need = table.pages_for(new_len) - len(info.pages)
         if need > 0:
-            self._reclaim(need)
-            if not self.table.can_alloc(need):
+            self._reclaim(need, shard=shard)
+            if not table.can_alloc(need):
                 return False
-            info.pages.extend(self.table.alloc(need))
+            info.pages.extend(table.alloc(need))
         info.length = new_len
         return True
 
@@ -441,8 +519,9 @@ class PagedKVCache:
         if info is None:
             raise RuntimeError(
                 f"double release: slot {slot} is not active")
-        self.table.free(info.pages)
-        self.table.free(info.aux_pages)
+        table = self.tables[self.shard_of(slot)]
+        table.free(info.pages)
+        table.free(info.aux_pages)
 
     def length(self, slot: int) -> int:
         return self.slots[slot].length

@@ -22,6 +22,16 @@ Greedy and temperature sampling are both wired through
 (serve/sampling.py, shared with the static engine; per request, as a
 traced per-row temperature vector — no recompilation).
 
+``ContinuousBatchingEngine(mesh=...)`` serves **sharded**: the decode
+slot axis lays out over the production mesh's ``("pod", "data")`` axes
+(``launch/mesh.py`` builds the meshes; ``parallel.sharding.rules_for``
+resolves the per-architecture rules), parameters and donated buffers get
+``NamedSharding`` layouts, the paged bookkeeping and prefix pool
+partition per slot shard, and ``sp_kv=True`` turns on the
+sequence-parallel KV cache (flash-decoding combine) over ``"model"``.
+The host loop, token chaining, and deferred flush are unchanged — a
+``mesh=None`` engine is bitwise the single-device engine.
+
 ``StaticBatchEngine`` is the old run-to-completion engine (one prefill +
 a decode loop over a fixed batch), kept purely as the correctness and
 throughput baseline (benchmarks/serve_bench.py, the per-family parity
@@ -33,6 +43,8 @@ functions used by the multi-pod dry-run and the SP-KV tests.
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -43,6 +55,8 @@ from repro.configs.shapes import ShapeSpec
 from repro.core import costmodel
 from repro.models import decode_state
 from repro.models.model import LM
+from repro.parallel import axes as paxes
+from repro.parallel.sharding import layout_report, rules_for
 from repro.perf.measure import now
 from repro.serve import sampling  # noqa: F401  (submodule import, no cycle)
 from repro.serve.cache import PagedKVCache
@@ -206,15 +220,33 @@ class ContinuousBatchingEngine:
     (bounded by ``prefix_pool`` entries, refcounted pages, reclaimed
     LRU-first under pressure) and a matching admission copies the donor
     slot's K/V once instead of re-prefilling — preemption recovery
-    included.  Recurrent families (ssm, hybrid) silently run with the
-    cache off: their conv/SSD state cannot be truncated to a prefix.
+    included.  Recurrent families (ssm, hybrid) run with the cache off
+    (a UserWarning names the family): their conv/SSD state cannot be
+    truncated to a prefix.
+
+    ``mesh`` makes the engine **mesh-aware**: the decode slot ("batch")
+    axis shards over the mesh's ``("pod", "data")`` axes and parameters /
+    activations follow the resolved per-architecture rules
+    (``parallel.sharding.rules_for``; pass ``rules`` to override).  The
+    paged bookkeeping partitions with it — each slot shard owns its own
+    page-table budget and prefix pool, and the scheduler admits,
+    preempts, and matches donors shard-locally — while every donated
+    device buffer (decode state, output rows, chained samples) is laid
+    out with ``NamedSharding`` and pinned there across steps.
+    ``sp_kv=True`` additionally shards the KV-cache sequence axis over
+    ``"model"`` (the flash-decoding combine in attention).  With
+    ``mesh=None`` (default) nothing changes: the single-device path is
+    bitwise the unsharded engine.  A mesh whose slot axes do not divide
+    ``n_slots`` serves replicated (one shard) and records the decision
+    in ``sharding_meta``.
     """
 
     def __init__(self, model: LM, params, *, n_slots: int, max_len: int,
                  page_size: int = 16, prefill_chunk: int = 8,
                  page_budget: Optional[int] = None,
                  eos_id: Optional[int] = None, seed: int = 0,
-                 prefix_cache: bool = False, prefix_pool: int = 8):
+                 prefix_cache: bool = False, prefix_pool: int = 8,
+                 mesh=None, rules=None, sp_kv: bool = False):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -223,15 +255,36 @@ class ContinuousBatchingEngine:
         # state is a token prefix (attention KV + pos + installed
         # context); recurrent families run with the pool disabled and a
         # permanent 0% hit rate rather than wrong state
+        if prefix_cache and not model.decode_state.prefix_cachable:
+            warnings.warn(
+                f"prefix_cache=True ignored: family {model.cfg.family!r} "
+                "has non-token-addressable (recurrent) decode state that "
+                "cannot be truncated to a prompt prefix; serving with the "
+                "prefix cache off", UserWarning, stacklevel=2)
         self.prefix_cache = bool(prefix_cache
                                  and model.decode_state.prefix_cachable)
+        self.mesh = mesh
+        self.sp_kv = bool(sp_kv)
+        self.rules = None
+        self.n_shards = 1
+        self.sharding_meta: Optional[Dict[str, Any]] = None
+        self._cache_sharding = None
+        self._slot_sharding = None
+        self._out_sharding = None
+        if mesh is not None:
+            self.rules = (dict(rules) if rules is not None
+                          else rules_for(model.cfg, mesh, sp_kv=sp_kv))
+            self._init_mesh_layout()
         self.kv = PagedKVCache(
             n_slots, max_len, page_size, page_budget=page_budget,
             slot_aux_tokens=model.decode_state.context_tokens(model.cfg),
-            prefix_pool=prefix_pool if self.prefix_cache else 0)
+            prefix_pool=prefix_pool if self.prefix_cache else 0,
+            n_shards=self.n_shards)
         self.sched = Scheduler(self.kv, prefill_chunk=prefill_chunk,
                                eos_id=eos_id)
         self.cache = model.init_cache(n_slots, max_len)
+        if mesh is not None:
+            self.cache = jax.device_put(self.cache, self._cache_sharding)
         self._seed = seed
         # Sampled tokens stay ON DEVICE between steps: the previous step's
         # samples feed the next step's decode rows (token_src) and every
@@ -247,28 +300,42 @@ class ContinuousBatchingEngine:
         # single-row (1, prefill_chunk) forward per prefilling slot
         # (cache_row / set_cache_row) — so prefill work scales with the
         # chunk's own tokens, never with n_slots x chunk.
-        self._decode_fn = jax.jit(self._make_decode_fn(),
-                                  donate_argnums=(1, 2, 3),
-                                  static_argnums=(12,))
-        self._prefill_fn = jax.jit(self._make_prefill_fn(),
-                                   donate_argnums=(1, 2, 3),
-                                   static_argnums=(12,))
-        self._reset_fn = jax.jit(model.reset_cache_slots,
-                                 donate_argnums=(0,))
+        # mesh-aware jits: every step function traces under the engine's
+        # sharding context (activating the model's logical-axis
+        # constraints and, with sp_kv, the SP-KV decode path) and pins
+        # its donated outputs to the NamedSharding layout so buffers are
+        # actually reused in place across steps
+        triple_sh = (self._slot_sharding, self._cache_sharding,
+                     self._out_sharding)
+        self._decode_fn = self._jit(self._make_decode_fn(),
+                                    donate_argnums=(1, 2, 3),
+                                    static_argnums=(12,),
+                                    out_shardings=triple_sh)
+        self._prefill_fn = self._jit(self._make_prefill_fn(),
+                                     donate_argnums=(1, 2, 3),
+                                     static_argnums=(12,),
+                                     out_shardings=triple_sh)
+        self._reset_fn = self._jit(model.reset_cache_slots,
+                                   donate_argnums=(0,),
+                                   out_shardings=self._cache_sharding)
         # admission-time context install (vlm/audio cross K/V); compiled
         # once — extra shapes are fixed by the config
-        self._install_fn = jax.jit(model.install_slot_context,
-                                   donate_argnums=(1,))
+        self._install_fn = self._jit(model.install_slot_context,
+                                     donate_argnums=(1,),
+                                     out_shardings=self._cache_sharding)
         # prefix-hit admission: copy the donor slot's first n tokens of
         # K/V into the admitted slot (traced src/dst/n -> compiled once)
-        self._prefix_fn = jax.jit(model.install_cache_prefix,
-                                  donate_argnums=(0,))
+        self._prefix_fn = self._jit(model.install_cache_prefix,
+                                    donate_argnums=(0,),
+                                    out_shardings=self._cache_sharding)
         # output rows outnumber slots so finished requests' tokens can
         # stay on device until a flush point — the host reads the buffer
         # once per ~2*n_slots finishes instead of syncing every finish
         self._n_out_rows = 3 * n_slots
-        self._out_buf = jnp.zeros((self._n_out_rows, max_len), jnp.int32)
-        self._prev_sampled = jnp.zeros((n_slots,), jnp.int32)
+        self._out_buf = self._put_out(
+            jnp.zeros((self._n_out_rows, max_len), jnp.int32))
+        self._prev_sampled = self._put_slot(
+            jnp.zeros((n_slots,), jnp.int32))
         self._free_rows = list(range(self._n_out_rows))
         self._slot_row = np.full((n_slots,), -1, np.int32)
         self._pending: List[Request] = []        # finished, tokens unread
@@ -278,6 +345,91 @@ class ContinuousBatchingEngine:
         self._cost = StepCostModel(model.cfg, max_len)
         self.stats = EngineStats()
         self._results: Dict[int, np.ndarray] = {}
+
+    # -- mesh layout ------------------------------------------------------
+    def _init_mesh_layout(self) -> None:
+        """Resolve the slot-shard count and the ``NamedSharding`` layout
+        of every donated buffer over ``self.mesh``, and lay the
+        parameters out; forced-replication decisions recorded by the
+        resolver land in ``sharding_meta`` (satellite of the roofline
+        report)."""
+        model, mesh, rules = self.model, self.mesh, self.rules
+        extra_decisions: List[str] = []
+        if self.sp_kv:
+            # honesty over intent: sp_kv only *runs* when the kv_seq rule
+            # resolves to axes this mesh actually has (the family has a
+            # KV cache at all) AND their size divides the cache length —
+            # attn_decode picks the shard_map path on rule *presence*, so
+            # an unexecutable rule must be stripped, not just replicated
+            # by the resolver.  Record what executes, not the ask.
+            kv_rule = rules.get("kv_seq")
+            kv_axes = tuple(a for a in (kv_rule if isinstance(kv_rule, tuple)
+                                        else (kv_rule,) if kv_rule else ())
+                            if a in mesh.shape)
+            size = (math.prod(mesh.shape[a] for a in kv_axes)
+                    if kv_axes else 0)
+            if not kv_axes or self.max_len % size:
+                self.sp_kv = False
+                self.rules = rules = dict(rules, kv_seq=None)
+                if kv_axes:
+                    extra_decisions.append(
+                        f"sp_kv disabled: cache length {self.max_len} not "
+                        f"divisible by mesh axes {kv_axes} (size {size})")
+        with paxes.sharding_ctx(mesh, rules):
+            spec = paxes.resolve_spec(("batch",), (self.n_slots,))
+            ax = spec[0] if len(spec) else None
+            axs = (ax,) if isinstance(ax, str) else (ax or ())
+            self.n_shards = math.prod(mesh.shape[a] for a in axs) if axs else 1
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(self.n_slots, self.max_len))
+            self._cache_sharding = paxes.tree_shardings(
+                model.cache_specs(), cache_sds, mesh, rules)
+            self._slot_sharding = paxes.named_sharding(
+                ("batch",), (self.n_slots,))
+            self._out_sharding = paxes.named_sharding(
+                ("batch", None), (3 * self.n_slots, self.max_len))
+            params_sds = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+                self.params)
+            pspecs = model.param_specs()
+            try:
+                param_sh = paxes.tree_shardings(pspecs, params_sds,
+                                                mesh, rules)
+            except (KeyError, TypeError, ValueError):
+                # re-laid-out params (e.g. weight-only int8): derive the
+                # quantized spec tree the way the dry-run does
+                from repro.models.quant import quantize_specs
+                param_sh = paxes.tree_shardings(
+                    quantize_specs(pspecs, params_sds), params_sds,
+                    mesh, rules)
+            self.params = jax.device_put(self.params, param_sh)
+            decisions = extra_decisions + paxes.decisions()
+        self.sharding_meta = layout_report(mesh, rules, decisions,
+                                           n_shards=self.n_shards,
+                                           sp_kv=self.sp_kv)
+
+    def _jit(self, fn, *, out_shardings=None, **kw):
+        """``jax.jit`` that, when a mesh is configured, pins output
+        shardings and runs every (trace-triggering) call inside the
+        engine's sharding context."""
+        if self.mesh is None:
+            return jax.jit(fn, **kw)
+        jfn = jax.jit(fn, out_shardings=out_shardings, **kw)
+        mesh, rules = self.mesh, self.rules
+
+        def call(*args):
+            with paxes.sharding_ctx(mesh, rules):
+                return jfn(*args)
+
+        return call
+
+    def _put_slot(self, x):
+        return x if self.mesh is None else jax.device_put(
+            x, self._slot_sharding)
+
+    def _put_out(self, x):
+        return x if self.mesh is None else jax.device_put(
+            x, self._out_sharding)
 
     def _sample(self, last, temperatures, step_idx, salt, any_temp):
         """last: (R, V) logits; returns (R,) int32 tokens (shared
@@ -348,16 +500,20 @@ class ContinuousBatchingEngine:
         without paying compilation again."""
         self.kv = PagedKVCache(self.n_slots, self.max_len,
                                self.kv.page_size,
-                               page_budget=self.kv.table.n_pages,
+                               page_budget=self.kv.page_budget,
                                slot_aux_tokens=self.kv.slot_aux_tokens,
-                               prefix_pool=self.kv.prefix_pool)
+                               prefix_pool=self.kv.prefix_pool,
+                               n_shards=self.n_shards)
         self.sched = Scheduler(self.kv,
                                prefill_chunk=self.sched.prefill_chunk,
                                eos_id=self.sched.eos_id)
         self.cache = self.model.init_cache(self.n_slots, self.max_len)
-        self._out_buf = jnp.zeros((self._n_out_rows, self.max_len),
-                                  jnp.int32)
-        self._prev_sampled = jnp.zeros((self.n_slots,), jnp.int32)
+        if self.mesh is not None:
+            self.cache = jax.device_put(self.cache, self._cache_sharding)
+        self._out_buf = self._put_out(
+            jnp.zeros((self._n_out_rows, self.max_len), jnp.int32))
+        self._prev_sampled = self._put_slot(
+            jnp.zeros((self.n_slots,), jnp.int32))
         self._free_rows = list(range(self._n_out_rows))
         self._slot_row = np.full((self.n_slots,), -1, np.int32)
         self._pending = []

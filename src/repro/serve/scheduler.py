@@ -31,6 +31,16 @@ preemption) hand the committed prompt prefix to the pool, which turns
 recompute-style preemption into copy-style for cached prefixes: the
 re-admitted victim matches its own pages and resumes prefill at the
 page-aligned high-water mark.
+
+Slot shards (``PagedKVCache(n_shards > 1)``, the mesh-sharded engine):
+every decision that spends pages is **shard-local**.  Admission ranks
+shards by longest shard-local prefix match, then most free pages (load
+balance), and claims the first that can admit; a blocked decode/prefill
+growth preempts the youngest request *of the stalled slot's own shard*
+(freeing another shard's pages cannot unblock it); prefix donors are
+matched only within the shard, so the engine's donor-row copy never
+crosses a device-block boundary.  With one shard this degenerates to
+exactly the unsharded policy.
 """
 from __future__ import annotations
 
@@ -184,6 +194,35 @@ class Scheduler:
         return bool(self.queue or self.active)
 
     # -- composition ----------------------------------------------------
+    def _place(self, req: Request, donors_busy: Set[int]):
+        """Choose a slot shard for ``req``: rank shards by longest
+        shard-local prefix match, then most free pages (load balance),
+        then lowest shard id, and return ``(shard, prefix_len, entry,
+        first_chunk)`` for the first candidate that can actually admit
+        (falling back to a cold admission in the same shard when only
+        the donor exclusions / page layout block the prefix path), or
+        None when no shard can take the request this step."""
+        excl = frozenset(donors_busy)
+        order = []
+        for shard in range(self.kv.n_shards):
+            plen, entry = self.kv.match_prefix(req.prompt,
+                                               keys=req.prefix_keys,
+                                               shard=shard)
+            order.append((-plen, -self.kv.free_pages_in(shard), shard,
+                          plen, entry))
+        order.sort(key=lambda t: t[:3])
+        for _, _, shard, plen, entry in order:
+            first_chunk = min(self.prefill_chunk, req.prompt_len - plen)
+            if self.kv.can_admit(first_chunk, prefix_len=plen,
+                                 prefix_entry=entry, exclude=excl,
+                                 shard=shard):
+                return shard, plen, entry, first_chunk
+            cold_chunk = min(self.prefill_chunk, req.prompt_len)
+            if plen and self.kv.can_admit(cold_chunk, exclude=excl,
+                                          shard=shard):
+                return shard, 0, None, cold_chunk
+        return None
+
     def _admit(self, step: int) -> List[int]:
         """Move queued requests into free slots while slot+page budget
         allows; returns the slots admitted this step (need a cache reset
@@ -201,24 +240,15 @@ class Scheduler:
             if req.prefix_keys is None and self.kv.prefix_pool:
                 req.prefix_keys = self.kv.prefix_keys(req.prompt,
                                                       ctx_key=req.ctx_key)
-            plen, entry = self.kv.match_prefix(req.prompt,
-                                               keys=req.prefix_keys)
-            first_chunk = min(self.prefill_chunk, req.prompt_len - plen)
-            if not self.kv.can_admit(first_chunk, prefix_len=plen,
-                                     prefix_entry=entry,
-                                     exclude=frozenset(donors_busy)):
-                # the prefix path may be blocked only by the donor
-                # exclusions / page layout — fall back to a cold admission
-                # before giving up on this step
-                cold_chunk = min(self.prefill_chunk, req.prompt_len)
-                if not (plen and self.kv.can_admit(
-                        cold_chunk, exclude=frozenset(donors_busy))):
-                    break
-                plen, entry, first_chunk = 0, None, cold_chunk
+            placed = self._place(req, donors_busy)
+            if placed is None:
+                break
+            shard, plen, entry, first_chunk = placed
             self.queue.popleft()
             slot = self.kv.admit(first_chunk, prefix_len=plen,
                                  prefix_entry=entry,
-                                 exclude=frozenset(donors_busy))
+                                 exclude=frozenset(donors_busy),
+                                 shard=shard)
             # a match never covers the whole prompt (capped one token
             # short so the completing chunk still produces the logits of
             # generated token #1) -> always at least one chunk to prefill
@@ -238,8 +268,8 @@ class Scheduler:
             admitted.append(slot)
         return admitted
 
-    def _preempt_youngest(self, younger_than: Optional[int] = None
-                          ) -> Optional[int]:
+    def _preempt_youngest(self, younger_than: Optional[int] = None,
+                          shard: Optional[int] = None) -> Optional[int]:
         """Push the most recently admitted request back to the queue front
         (pages freed, prefill restarts on re-admission).  This is
         recompute-style preemption for *every* family's decode state: the
@@ -250,10 +280,14 @@ class Scheduler:
         admitted *after* ``younger_than`` are candidates — a stalled
         request never evicts its elders (it waits instead), so the oldest
         in-flight request always progresses and the system cannot
-        livelock on mutual eviction."""
+        livelock on mutual eviction.  ``shard`` restricts victims to one
+        slot shard: pages freed elsewhere cannot unblock a stalled slot
+        whose shard owns its own page table."""
         cutoff = (self._admission_order.index(younger_than) + 1
                   if younger_than is not None else 0)
         for slot in reversed(self._admission_order[cutoff:]):
+            if shard is not None and self.kv.shard_of(slot) != shard:
+                continue
             self._admission_order.remove(slot)
             req = self.active.pop(slot)
             if slot not in self._fresh_slots:
@@ -298,7 +332,9 @@ class Scheduler:
                 continue
             ok = self.kv.grow(slot, 1)
             while not ok and self.kv.length(slot) < self.kv.max_len:
-                if self._preempt_youngest(younger_than=slot) is None:
+                if self._preempt_youngest(
+                        younger_than=slot,
+                        shard=self.kv.shard_of(slot)) is None:
                     break
                 ok = self.kv.grow(slot, 1)
             if ok:
@@ -320,9 +356,11 @@ class Scheduler:
             ok = self.kv.grow(slot, want)
             while not ok:
                 # page pressure: preempt the youngest strictly-younger
-                # request (it may be one of this step's decode rows —
-                # drop it there); with none to evict, wait a step
-                victim = self._preempt_youngest(younger_than=slot)
+                # request of this slot's own shard (it may be one of this
+                # step's decode rows — drop it there); with none to
+                # evict, wait a step
+                victim = self._preempt_youngest(
+                    younger_than=slot, shard=self.kv.shard_of(slot))
                 if victim is None:
                     break
                 if victim in decode_slots:

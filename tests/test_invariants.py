@@ -1,0 +1,32 @@
+"""Tier1 source-tree invariants: ROADMAP contracts enforced by grep.
+
+The measurement API contract says ``time.perf_counter`` may appear in
+exactly one file — ``src/repro/perf/measure.py`` (the single warm-up +
+block_until_ready + median-of-interleaved-repeats timing implementation
+plus ``now()``).  Everything else (benchmarks, engines, launchers,
+examples) must route through ``repro.perf.measure``; this was
+previously enforced only at review time.
+"""
+import pathlib
+
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SCANNED = ("src", "benchmarks", "examples", "scripts")
+ALLOWED = {pathlib.Path("src/repro/perf/measure.py")}
+
+
+def test_perf_counter_only_in_perf_measure():
+    offenders = []
+    for sub in SCANNED:
+        for path in sorted((ROOT / sub).rglob("*.py")):
+            rel = path.relative_to(ROOT)
+            if rel in ALLOWED or "__pycache__" in rel.parts:
+                continue
+            if "perf_counter" in path.read_text(encoding="utf-8"):
+                offenders.append(str(rel))
+    assert not offenders, (
+        "time.perf_counter outside src/repro/perf/measure.py — route "
+        f"timing through repro.perf.measure instead: {offenders}")

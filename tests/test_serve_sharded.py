@@ -1,0 +1,213 @@
+"""Sharded serving: decode slots and prefix pages over the mesh.
+
+Host-side units cover the partitioned bookkeeping (per-shard page
+tables, shard-local prefix pools, shard-local preemption) and the
+prefix-cache warning satellite; the subprocess test (8 fake devices
+split into 4 slot shards) is the acceptance gate: temperature-0 token
+parity between the unsharded engine and a 4-shard mesh engine for
+dense + moe + one recurrent family, under chunked prefill, forced
+preemption, mid-run admission, and (for the cachable families) a
+prefix-cache hit — plus the 1-device-mesh strict no-op and the SP-KV
+(sequence-parallel KV) engine path.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import reduced_config
+from repro.models import build_model
+from repro.serve import ContinuousBatchingEngine, PagedKVCache, Scheduler
+
+pytestmark = pytest.mark.tier1
+
+PAGE = 8
+
+
+# ---------------------------------------------------------------------------
+# host-side units: partitioned bookkeeping
+# ---------------------------------------------------------------------------
+def test_sharded_cache_partitions_budget_and_pool():
+    kv = PagedKVCache(n_slots=4, max_len=32, page_size=PAGE,
+                      page_budget=8, prefix_pool=2, n_shards=2)
+    assert kv.page_budget == 8
+    assert [t.n_pages for t in kv.tables] == [4, 4]
+    assert kv.table is kv.tables[0]
+    assert [kv.shard_of(s) for s in range(4)] == [0, 0, 1, 1]
+    assert kv.free_slots_in(1) == [2, 3]
+
+    s0 = kv.admit(8, shard=0)
+    assert kv.shard_of(s0) == 0
+    assert kv.grow(s0, 32)                     # 32 tokens -> all 4 pages
+    assert kv.free_pages_in(0) == 0 and kv.free_pages_in(1) == 4
+    # shard 0's table is exhausted; shard 1's budget is untouched by it
+    assert not kv.can_admit(8, shard=0)
+    assert kv.can_admit(8, shard=1)
+
+    s1 = kv.admit(8, shard=1)
+    assert kv.shard_of(s1) == 1
+    assert kv.grow(s1, 8)                      # 16 committed tokens
+    entry = kv.cache_prefix(s1, list(range(16)))
+    assert entry is not None
+    kv.release(s1)
+    prompt = list(range(16)) + [99]            # 2 matchable page keys
+    # the pooled prefix is visible in its own shard only: the donor row
+    # lives on that shard's device block
+    plen, e = kv.match_prefix(prompt, shard=1)
+    assert plen == 16 and e is entry
+    assert kv.match_prefix(prompt, shard=0) == (0, None)
+
+
+def test_sharded_cache_rejects_uneven_splits():
+    with pytest.raises(ValueError, match="n_shards"):
+        PagedKVCache(n_slots=3, max_len=32, page_size=PAGE, n_shards=2)
+    with pytest.raises(ValueError, match="page_budget"):
+        PagedKVCache(n_slots=4, max_len=32, page_size=PAGE,
+                     page_budget=7, n_shards=2)
+
+
+def test_scheduler_balances_shards_and_preempts_locally():
+    kv = PagedKVCache(n_slots=4, max_len=32, page_size=PAGE,
+                      page_budget=8, n_shards=2)
+    sched = Scheduler(kv, prefill_chunk=8)
+    reqs = [sched.submit(np.arange(1, 16), 8) for _ in range(4)]
+    assert sched.next_plan(0) is not None
+    per_shard = {}
+    for slot in sched.active:
+        per_shard.setdefault(kv.shard_of(slot), []).append(slot)
+    # load-balanced placement: two requests per shard, not four in one
+    assert {k: len(v) for k, v in per_shard.items()} == {0: 2, 1: 2}
+
+    # the global youngest admission lives in shard 1; a shard-0 stall
+    # must preempt the youngest of shard 0 (its own page table), never
+    # reach across
+    victim = sched._preempt_youngest(shard=0)
+    assert victim is not None and kv.shard_of(victim) == 0
+    assert sched.queue[0].rid == reqs[2].rid
+
+
+# ---------------------------------------------------------------------------
+# satellite: prefix_cache on a non-cachable family warns with the family
+# ---------------------------------------------------------------------------
+def test_prefix_cache_warning_names_family():
+    """The engine constructor (and therefore launch/serve.py, which
+    builds the engine) must not silently ignore prefix_cache=True for
+    recurrent families."""
+    cfg = reduced_config("mamba2-780m")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    with pytest.warns(UserWarning, match="'ssm'"):
+        eng = ContinuousBatchingEngine(model, params, n_slots=2,
+                                       max_len=32, page_size=PAGE,
+                                       prefix_cache=True)
+    assert not eng.prefix_cache
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 1-device vs 4-shard parity in a forced-multi-device child
+# ---------------------------------------------------------------------------
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax
+from repro.configs import reduced_config
+from repro.launch.mesh import AxisType, make_mesh
+from repro.models import build_model
+from repro.serve import ContinuousBatchingEngine
+
+PAGE = 8
+
+
+def workload(cfg, rng):
+    # a page-aligned shared system prefix (so admissions can hit the
+    # pool) + six heavy requests whose decode growth overruns the tight
+    # per-shard budget (forcing shard-local preemption) + four light
+    # requests; 10 requests > 8 slots exercises mid-run admission
+    shared = rng.integers(1, cfg.vocab_size, size=PAGE)
+    reqs = []
+    for i in range(6):
+        tail = rng.integers(1, cfg.vocab_size, size=7)
+        reqs.append((np.concatenate([shared, tail]), 5 if i % 2 else 4))
+    for i in range(4):
+        tail = rng.integers(1, cfg.vocab_size, size=4)
+        reqs.append((np.concatenate([shared, tail]), 6))
+    return reqs
+
+
+def serve(model, params, reqs, mesh, prefix, sp_kv=False):
+    # page_budget 16 = 4 pages per shard on the 4-shard mesh: two
+    # 15-token prompts in one shard fill it, so decode growth preempts
+    eng = ContinuousBatchingEngine(
+        model, params, n_slots=8, max_len=32, page_size=PAGE,
+        prefill_chunk=4, page_budget=16, prefix_cache=prefix,
+        mesh=mesh, sp_kv=sp_kv)
+    rids = [eng.submit(p, g) for p, g in reqs]
+    out = eng.run()
+    return eng, [out[r].tolist() for r in rids]
+
+
+mesh4 = make_mesh((4,), ("data",), axis_types=(AxisType.Auto,))
+for arch, prefix in [("granite-3-2b", True),
+                     ("phi3.5-moe-42b-a6.6b", True),
+                     ("mamba2-780m", False)]:
+    cfg = reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    reqs = workload(cfg, np.random.default_rng(3))
+    _, base = serve(model, params, reqs, None, prefix)
+    eng, sharded = serve(model, params, reqs, mesh4, prefix)
+    assert eng.n_shards == 4, eng.n_shards
+    assert sharded == base, f"{arch}: sharded/unsharded token divergence"
+    assert sum(r.n_preemptions for r in eng.requests()) >= 1, \
+        f"{arch}: workload sized to force shard-local preemption"
+    assert any(r.admit_step > 0 for r in eng.requests()), \
+        f"{arch}: requests should enter recycled slots mid-run"
+    if prefix:
+        assert eng.stats.prefix_hit_tokens > 0, \
+            f"{arch}: shared prefix should hit the shard-local pool"
+    print(f"PARITY4_OK {arch}")
+
+    if arch != "granite-3-2b":
+        continue
+    # single-device mesh: a strict no-op next to the unmeshed engine
+    mesh1 = make_mesh((1,), ("data",), axis_types=(AxisType.Auto,))
+    eng1, one = serve(model, params, reqs, mesh1, prefix)
+    assert eng1.n_shards == 1 and one == base
+    print("MESH1_NOOP_OK")
+    # SP-KV engine path: slot shards over data, KV sequence over model
+    mesh22 = make_mesh((2, 2), ("data", "model"),
+                       axis_types=(AxisType.Auto,) * 2)
+    eng2, spkv = serve(model, params, reqs, mesh22, prefix, sp_kv=True)
+    assert eng2.n_shards == 2 and eng2.sharding_meta["sp_kv"]
+    assert spkv == base, "sp-kv token divergence"
+    print("SPKV_ENGINE_OK")
+    # sp_kv whose model-axis size does not divide max_len (32 % 3) must
+    # fall back to the plain decode path — recorded, parity intact
+    mesh13 = make_mesh((1, 3), ("data", "model"),
+                       axis_types=(AxisType.Auto,) * 2)
+    eng3, nosp = serve(model, params, reqs, mesh13, prefix, sp_kv=True)
+    assert not eng3.sharding_meta["sp_kv"]
+    assert any("sp_kv disabled" in d
+               for d in eng3.sharding_meta["forced_replication"])
+    assert nosp == base, "sp-kv fallback token divergence"
+    print("SPKV_FALLBACK_OK")
+"""
+
+
+def test_sharded_serve_token_parity_multi_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    for marker in ("PARITY4_OK granite-3-2b",
+                   "PARITY4_OK phi3.5-moe-42b-a6.6b",
+                   "PARITY4_OK mamba2-780m",
+                   "MESH1_NOOP_OK", "SPKV_ENGINE_OK", "SPKV_FALLBACK_OK"):
+        assert marker in out.stdout, (
+            marker + "\n" + out.stdout[-2000:] + out.stderr[-4000:])
