@@ -14,8 +14,9 @@ benchmarks/results``).
 from __future__ import annotations
 
 import argparse
-import time
 import traceback
+
+from repro.perf.measure import now
 
 from benchmarks import (
     common,
@@ -72,13 +73,13 @@ def main() -> None:
         if name not in selected:
             continue
         print(f"\n{'=' * 72}\nrunning {name}\n{'=' * 72}")
-        t0 = time.time()
+        t0 = now()
         try:
             mod.run(measure=not args.no_measure)
-            results.append((name, time.time() - t0, True))
+            results.append((name, now() - t0, True))
             print(f"[{name}] done in {results[-1][1]:.1f}s")
         except Exception as e:  # noqa: BLE001
-            results.append((name, time.time() - t0, False))
+            results.append((name, now() - t0, False))
             print(f"[{name}] FAILED: {e}")
             traceback.print_exc()
     print("\nsummary: " + " | ".join(

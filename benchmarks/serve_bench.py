@@ -48,12 +48,18 @@ the Report meta.  Shard counts needing more devices than the host
 exposes are skipped with a note (fake devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--sp-kv``
 uses (data x model) meshes and shards the KV sequence axis too.
+
+The shared-prefix baseline engine builds with ``analyze=True``, so the
+Report meta's ``analysis`` block records the ``repro.analysis.trace``
+cost-model lint (hot gathers, counter-blind scans, donation, ...) for
+the very compiled decode/prefill programs the rows time — the artifact
+says both how fast the step ran and what the compiler did to it.
 """
 from __future__ import annotations
 
 import argparse
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -200,11 +206,16 @@ def _run_pair(model, params, reqs, slots, max_len, *,
 
 
 def _prefix_rows(cfg, model, params, sc: Dict, family: str = "lm"
-                 ) -> List[Dict]:
+                 ) -> Tuple[List[Dict], Dict]:
     """Shared-prefix workload through two continuous engines — prefix
     cache on vs off — as equal interleaved contenders (measure_group):
     reset + re-submit runs as each contender's untimed per-repeat setup,
-    only the drain is timed."""
+    only the drain is timed.
+
+    The baseline (no-cache) engine is built with ``analyze=True``, so
+    the returned ``(rows, analysis)`` pair carries the trace-lint
+    verdict on the exact compiled decode/prefill programs being timed;
+    ``run`` records it in the Report meta."""
     page = 8
     rng = np.random.default_rng(13)
     shared = rng.integers(1, cfg.vocab_size, size=sc["shared_len"])
@@ -223,8 +234,9 @@ def _prefix_rows(cfg, model, params, sc: Dict, family: str = "lm"
             page_size=page, prefill_chunk=8, prefix_cache=True),
         "no_prefix_cache": ContinuousBatchingEngine(
             model, params, n_slots=sc["slots"], max_len=max_len,
-            page_size=page, prefill_chunk=8),
+            page_size=page, prefill_chunk=8, analyze=True),
     }
+    analysis = engines["no_prefix_cache"].analysis_meta
 
     def _pass(eng):
         def setup():
@@ -259,7 +271,7 @@ def _prefix_rows(cfg, model, params, sc: Dict, family: str = "lm"
             "model_bytes": s["model_bytes"],
             "roofline_utilization": roofline_fraction(
                 s["model_flops"], s["model_bytes"], m.median_s)})
-    return rows
+    return rows, analysis
 
 
 def _sharded_mesh(count: int, sp_kv: bool):
@@ -410,10 +422,11 @@ def run(measure: bool = True,
         cfg = reduced_config(ARCH)
         model = build_model(cfg)
         params = model.init_params(jax.random.key(0))
-        rows = _prefix_rows(cfg, model, params,
-                            PREFIX_SCENARIO_SMOKE if smoke
-                            else PREFIX_SCENARIO)
+        rows, analysis = _prefix_rows(cfg, model, params,
+                                      PREFIX_SCENARIO_SMOKE if smoke
+                                      else PREFIX_SCENARIO)
     elif families:
+        analysis = None                  # mix-only rows, no traced engine
         if "all" in families:
             families = list(FAMILY_ARCHS)
         unknown = sorted(set(families) - set(FAMILY_ARCHS))
@@ -431,11 +444,14 @@ def run(measure: bool = True,
         model = build_model(cfg)
         params = model.init_params(jax.random.key(0))
         rows += _mix_rows(cfg, model, params, MIXES, "lm")
-        rows += _prefix_rows(cfg, model, params, PREFIX_SCENARIO)
+        prefix_rows, analysis = _prefix_rows(cfg, model, params,
+                                             PREFIX_SCENARIO)
+        rows += prefix_rows
     common.save_result("serve_bench", rows,
                        meta={"reduced": True, "repeats": REPEATS,
                              "statistic": "median", "smoke": smoke,
-                             "families": families or ["lm"]})
+                             "families": families or ["lm"],
+                             "analysis": analysis})
     classic = [r for r in rows if r["mix"] != "shared_prefix"]
     prefix = [r for r in rows if r["mix"] == "shared_prefix"]
     if classic:

@@ -1,18 +1,28 @@
 #!/usr/bin/env bash
-# Fast PR gate: the tier1 subset — compat shims + perf API + serving
-# subsystem, including the per-family continuous-vs-static parity smoke
-# tests (tests/test_serve_families.py: one smallest config per family,
-# all five of lm/ssm/hybrid/vlm/audio) — runs in under 2 minutes; the
-# full suite (incl. 10+ min model smoke tests) stays on the nightly path:
+# Fast PR gate: the invariant linter + the tier1 subset — compat shims +
+# perf API + serving subsystem, including the per-family
+# continuous-vs-static parity smoke tests (tests/test_serve_families.py:
+# one smallest config per family, all five of lm/ssm/hybrid/vlm/audio)
+# — runs in under 2 minutes; the full suite (incl. 10+ min model smoke
+# tests) stays on the nightly path:
 #
-#   scripts/ci.sh                 # tier1 only
+#   scripts/ci.sh                 # lint + tier1
+#   scripts/ci.sh --lint          # invariant linter only (<30s, no jax)
 #   scripts/ci.sh --full          # entire suite
 #   scripts/ci.sh --bench-smoke   # tiny-shape benchmark run + validate
 #                                 # every benchmarks/results/*.json
 #                                 # against the repro.perf.report schema
+#                                 # (incl. the trace-lint analysis block)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--lint" ]]; then
+    shift
+    # source-rule layer only (stdlib, no jax import): ROADMAP standing
+    # invariants as named, waivable checks — see src/repro/analysis/
+    exec python -m repro.analysis --ci "$@"
+fi
 
 if [[ "${1:-}" == "--bench-smoke" ]]; then
     shift
@@ -41,11 +51,25 @@ PY
     XLA_FLAGS="--xla_force_host_platform_device_count=2" \
         REPRO_BENCH_SMOKE=1 python -m benchmarks.serve_bench --sharded
     python -m repro.perf --validate benchmarks/results
+    # the serve artifact must carry the trace-lint verdict on the very
+    # decode program it timed (ContinuousBatchingEngine(analyze=True))
+    python - <<'PY'
+import json
+meta = json.load(open("benchmarks/results/serve_bench.json"))["meta"]
+analysis = meta["analysis"]
+decode = analysis["programs"]["decode_step"]
+assert decode["findings"], "decode_step trace lint produced no findings"
+print(f"[bench-smoke] serve_bench analysis block ok: "
+      f"{analysis['n_findings']} finding(s), "
+      f"worst={analysis['worst_severity']}")
+PY
     exit 0
 fi
 
 if [[ "${1:-}" == "--full" ]]; then
     shift
+    python -m repro.analysis --ci
     exec python -m pytest -q "$@"
 fi
+python -m repro.analysis --ci
 exec python -m pytest -q -m tier1 "$@"

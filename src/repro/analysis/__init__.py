@@ -1,0 +1,47 @@
+"""repro.analysis — the two-layer static-analysis subsystem.
+
+Layer 1, source lint (``repro.analysis.lint``): every ROADMAP standing
+invariant as a named, waivable AST rule — timing confinement,
+compat-shim bypasses, results-writer bypasses, donation hygiene.
+Stdlib-only (never imports jax), so ``python -m repro.analysis --ci``
+and the tier1 invariant test stay fast.
+
+Layer 2, trace lint (``repro.analysis.trace``): the paper's mispriced
+patterns checked on compiled programs — gather/strided access,
+predication density, while-lowered scans that blind the counters
+(Table 1 via ``repro.core.counters``), f32 upcasts in low-precision
+programs, host callbacks, and missed donation.  Imported lazily here so
+``import repro.analysis`` stays jax-free.
+
+Waivers: ``repro.analysis.findings`` (``load_waivers``/``apply_waivers``
+over the committed ``waivers.toml`` baseline — every entry carries a
+reason).  Serve integration: ``ContinuousBatchingEngine(analyze=True)``
+runs the trace rules over its compiled step fns at build time;
+serve_bench records the result in its Report meta.
+"""
+from repro.analysis.findings import (  # noqa: F401
+    Finding,
+    Waiver,
+    apply_waivers,
+    load_waivers,
+)
+from repro.analysis.lint import (  # noqa: F401
+    SCAN_DIRS,
+    SOURCE_RULES,
+    lint_file,
+    lint_source,
+    lint_tree,
+)
+
+__all__ = [
+    "Finding", "Waiver", "apply_waivers", "load_waivers",
+    "SCAN_DIRS", "SOURCE_RULES", "lint_file", "lint_source", "lint_tree",
+    "trace",  # lazy: repro.analysis.trace (imports jax)
+]
+
+
+def __getattr__(name):
+    if name == "trace":
+        import repro.analysis.trace as trace_mod
+        return trace_mod
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")

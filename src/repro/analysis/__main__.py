@@ -1,0 +1,8 @@
+"""CLI entry point: the invariant linter / CI gate.
+
+    PYTHONPATH=src python -m repro.analysis --ci
+"""
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,115 @@
+"""CLI for the invariant linter.
+
+    PYTHONPATH=src python -m repro.analysis [--ci] [paths...]
+
+Reporting/exit contract (shared with ``python -m repro.perf
+--validate``): offending files print as a ``FAIL <path>`` line with one
+indented ``  - `` line per finding, clean runs print nothing per-file,
+and the last line is a ``<clean>/<scanned> files clean`` summary.  Exit
+codes: 0 = clean (waived findings allowed), 1 = unwaived findings,
+2 = usage error / nothing to scan.
+
+``--ci`` is the gate mode (``scripts/ci.sh --lint`` and the default
+tier1 path): identical scanning, but waived findings are not listed
+individually — only counted — keeping gate output about what must be
+fixed.  This command never imports jax; the trace layer runs through
+``ContinuousBatchingEngine(analyze=True)`` / tests instead, so the gate
+stays inside its <30s budget.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List, Optional
+
+from repro.analysis import lint
+from repro.analysis.findings import (
+    DEFAULT_WAIVERS,
+    apply_waivers,
+    group_by_path,
+    load_waivers,
+)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="invariant linter: ROADMAP standing invariants as "
+                    "named, waivable AST rules (see repro.analysis.lint)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: "
+                         f"{'/'.join(lint.SCAN_DIRS)} under --root)")
+    ap.add_argument("--ci", action="store_true",
+                    help="gate mode: list only unwaived findings "
+                         "(exit 1 if any)")
+    ap.add_argument("--root", default=".",
+                    help="repo root the scan set and waiver paths are "
+                         "relative to (default: cwd)")
+    ap.add_argument("--waivers", default=None, metavar="FILE",
+                    help=f"waiver baseline (default: {DEFAULT_WAIVERS})")
+    ap.add_argument("--rules", action="store_true",
+                    help="print the rule registry and exit")
+    args = ap.parse_args(argv)
+
+    if args.rules:
+        for r in sorted(lint.SOURCE_RULES.values(), key=lambda r: r.rule):
+            print(f"{r.rule:24s} [{r.severity}] {r.description}")
+        return 0
+
+    root = pathlib.Path(args.root).resolve()
+    if args.paths:
+        files: List[pathlib.Path] = []
+        for a in args.paths:
+            p = pathlib.Path(a)
+            if p.is_dir():
+                files.extend(q for q in sorted(p.rglob("*.py"))
+                             if "__pycache__" not in q.parts)
+            elif p.is_file():
+                files.append(p)
+            else:
+                print(f"no such file or directory: {a}", file=sys.stderr)
+                return 2
+    else:
+        files = lint.iter_tree(root)
+    if not files:
+        print(f"nothing to lint under {root} "
+              f"(scan set: {', '.join(lint.SCAN_DIRS)})", file=sys.stderr)
+        return 2
+
+    try:
+        waivers = load_waivers(
+            pathlib.Path(args.waivers) if args.waivers else None)
+    except ValueError as e:
+        print(f"bad waiver file: {e}", file=sys.stderr)
+        return 2
+
+    findings = []
+    for f in files:
+        try:
+            rel = f.resolve().relative_to(root)
+        except ValueError:
+            rel = f
+        findings.extend(lint.lint_source(
+            f.read_text(encoding="utf-8"), rel.as_posix()))
+    unwaived, waived = apply_waivers(findings, waivers)
+
+    for path, fs in sorted(group_by_path(unwaived).items()):
+        print(f"FAIL {path}")
+        for f in fs:
+            print(f"  - L{f.line} [{f.severity}] {f.rule}: {f.message}")
+    if waived and not args.ci:
+        for path, pairs in sorted(group_by_path(
+                [f for f, _ in waived]).items()):
+            print(f"waived {path}")
+            for f, w in [(f, w) for f, w in waived if f.path == path]:
+                print(f"  - L{f.line} {f.rule} (waived: {w.reason})")
+
+    bad_files = len(group_by_path(unwaived))
+    print(f"{len(files) - bad_files}/{len(files)} files clean; "
+          f"{len(unwaived)} finding(s) ({len(waived)} waived)")
+    return 1 if unwaived else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,160 @@
+"""Findings and waivers — the shared vocabulary of both analysis layers.
+
+A :class:`Finding` is one rule hit: rule id, severity, location (a
+repo-relative path + line for the source lint, a ``<trace:label>``
+pseudo-path for the compiled-program lint), a one-line explanation, and
+optional machine-readable context.  Both layers (``repro.analysis.lint``
+source rules, ``repro.analysis.trace`` compiled-program rules) emit this
+one shape, so the CLI, the CI gate, the tier1 invariant test, and the
+serve_bench Report meta all consume the same records.
+
+Waivers live in a committed TOML baseline
+(``src/repro/analysis/waivers.toml``): every entry names a rule, a path
+(glob allowed), and a mandatory human reason — a reasonless waiver is a
+load error, not a silent pass.  ``apply_waivers`` splits findings into
+(unwaived, waived) so the gate stays adoptable on a tree with known,
+explained exceptions.
+
+This module is stdlib-only (no jax import): the source-lint CLI stays
+fast enough for the <30s ``scripts/ci.sh --lint`` budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import pathlib
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+SEVERITIES = ("error", "warning", "info")
+
+DEFAULT_WAIVERS = pathlib.Path(__file__).resolve().parent / "waivers.toml"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule hit, from either analysis layer."""
+
+    rule: str
+    severity: str            # "error" | "warning" | "info"
+    path: str                # repo-relative source path or "<trace:label>"
+    line: int                # 1-based source line; 0 for trace findings
+    message: str
+    context: Optional[Dict[str, Any]] = None
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc} [{self.severity}] {self.rule}: {self.message}"
+
+    def row(self) -> Dict[str, Any]:
+        out = {"rule": self.rule, "severity": self.severity,
+               "path": self.path, "line": self.line,
+               "message": self.message}
+        if self.context:
+            out["context"] = dict(self.context)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class Waiver:
+    """One baseline exception: rule + path glob + mandatory reason."""
+
+    rule: str
+    path: str                # fnmatch glob against Finding.path
+    reason: str
+    line: Optional[int] = None
+
+    def matches(self, f: Finding) -> bool:
+        if self.rule != f.rule:
+            return False
+        if self.line is not None and self.line != f.line:
+            return False
+        return f.path == self.path or fnmatch.fnmatch(f.path, self.path)
+
+
+def _parse_toml(text: str) -> Dict[str, Any]:
+    """Parse waiver TOML — stdlib ``tomllib`` (3.11+), ``tomli``, or a
+    minimal ``[[waiver]]``-subset fallback so the linter never grows a
+    dependency the container lacks."""
+    try:
+        import tomllib  # type: ignore[import-not-found]
+        return tomllib.loads(text)
+    except ImportError:
+        pass
+    try:
+        import tomli
+        return tomli.loads(text)
+    except ImportError:
+        pass
+    # last-resort subset parser: arrays of tables with string/int values
+    data: Dict[str, Any] = {}
+    cur: Optional[Dict[str, Any]] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        if line.startswith("[[") and line.endswith("]]"):
+            key = line[2:-2].strip()
+            cur = {}
+            data.setdefault(key, []).append(cur)
+            continue
+        if "=" in line and cur is not None:
+            k, _, v = line.partition("=")
+            v = v.strip()
+            if len(v) >= 2 and v[0] == v[-1] and v[0] in "\"'":
+                cur[k.strip()] = v[1:-1]
+            elif v.lstrip("-").isdigit():
+                cur[k.strip()] = int(v)
+    return data
+
+
+def load_waivers(path: Optional[pathlib.Path] = None) -> List[Waiver]:
+    """Load the waiver baseline; a missing default file means no waivers.
+
+    Raises ``ValueError`` on a malformed entry — in particular a waiver
+    without a (nonempty) ``reason``: baseline exceptions must explain
+    themselves.
+    """
+    p = pathlib.Path(path) if path is not None else DEFAULT_WAIVERS
+    if not p.exists():
+        if path is not None:
+            raise ValueError(f"waiver file not found: {p}")
+        return []
+    data = _parse_toml(p.read_text(encoding="utf-8"))
+    waivers: List[Waiver] = []
+    for i, entry in enumerate(data.get("waiver", [])):
+        if not isinstance(entry, dict):
+            raise ValueError(f"{p}: waiver #{i + 1} is not a table")
+        missing = [k for k in ("rule", "path", "reason")
+                   if not str(entry.get(k, "")).strip()]
+        if missing:
+            raise ValueError(
+                f"{p}: waiver #{i + 1} missing required field(s) "
+                f"{missing} — every waiver needs rule, path, and a "
+                "nonempty reason")
+        line = entry.get("line")
+        waivers.append(Waiver(rule=str(entry["rule"]),
+                              path=str(entry["path"]),
+                              reason=str(entry["reason"]),
+                              line=int(line) if line is not None else None))
+    return waivers
+
+
+def apply_waivers(findings: Sequence[Finding], waivers: Sequence[Waiver]
+                  ) -> Tuple[List[Finding], List[Tuple[Finding, Waiver]]]:
+    """Split findings into (unwaived, [(finding, matching waiver), ...])."""
+    unwaived: List[Finding] = []
+    waived: List[Tuple[Finding, Waiver]] = []
+    for f in findings:
+        w = next((w for w in waivers if w.matches(f)), None)
+        if w is None:
+            unwaived.append(f)
+        else:
+            waived.append((f, w))
+    return unwaived, waived
+
+
+def group_by_path(findings: Sequence[Finding]) -> Dict[str, List[Finding]]:
+    out: Dict[str, List[Finding]] = {}
+    for f in findings:
+        out.setdefault(f.path, []).append(f)
+    return out

@@ -23,6 +23,11 @@ The calibrated channels (the ones the roofline consumes):
   transcendental       'transcendentals' on an exp loop
 
 Each record: (channel, reference value, measured, error, reliable@5%).
+
+The verdicts also feed ``repro.analysis.trace``: its
+``scan-counter-blindness`` rule cites the ``flops_scan`` verdict when a
+compiled program lowers to ``while`` bodies, so benchmark artifacts
+record *why* their counter reads were forced to ``source="model"``.
 """
 from __future__ import annotations
 

@@ -13,6 +13,12 @@ Known counter caveats (calibrated in core/counters.py, Table-1 style):
     counter; roofline FLOPs therefore come from the analytic model.
   * "bytes accessed" counts every producer/consumer pair even when fused
     into one VMEM-resident kernel — an upper bound on HBM traffic.
+
+``repro.analysis.trace`` builds on this parser: its compiled-program
+lint reads ``analyze_hlo`` reports (plus ``_INSTR_RE`` for per-
+instruction dtypes) to flag the mispriced patterns — hot gathers,
+predication density, counter-blind scans — on the serve stack's actual
+step programs (``ContinuousBatchingEngine(analyze=True)``).
 """
 from __future__ import annotations
 

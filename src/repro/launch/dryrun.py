@@ -19,7 +19,6 @@ import argparse   # noqa: E402
 import dataclasses  # noqa: E402
 import json       # noqa: E402
 import pathlib    # noqa: E402
-import time       # noqa: E402
 import traceback  # noqa: E402
 
 import jax        # noqa: E402
@@ -32,6 +31,7 @@ from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.models import build_model  # noqa: E402
 from repro.optim import AdamWConfig  # noqa: E402
 from repro.parallel import rules_for, sharding_ctx, tree_shardings  # noqa: E402
+from repro.perf.measure import now  # noqa: E402
 from repro.parallel.axes import decisions as sharding_decisions  # noqa: E402
 from repro.serve import make_prefill_step, make_serve_step  # noqa: E402
 from repro.train import (  # noqa: E402
@@ -200,9 +200,9 @@ def lower_cell(cfg, shape, mesh, variant: Variant):
                 params_sh, cache_sh, tok_sh["tokens"], tok_sh["positions"]))
             lowered = fn.lower(params_sds, cache_sds, batch["tokens"],
                                batch["positions"])
-        t0 = time.time()
+        t0 = now()
         compiled = lowered.compile()
-        compile_s = time.time() - t0
+        compile_s = now() - t0
         return lowered, compiled, compile_s, sharding_decisions(), state_bytes
 
 
@@ -229,7 +229,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
-    t_start = time.time()
+    t_start = now()
     try:
         lowered, compiled, compile_s, decisions, state_bytes = lower_cell(
             cfg, shape, mesh, variant)
@@ -255,7 +255,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     rec.update({
         "compile_seconds": compile_s,
-        "wall_seconds": time.time() - t_start,
+        "wall_seconds": now() - t_start,
         "n_chips": n_chips,
         "memory": {
             "argument_bytes_per_device": mem.argument_size_in_bytes,

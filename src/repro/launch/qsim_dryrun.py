@@ -16,7 +16,6 @@ traffic and roofline terms like the LM dry-run.
 import argparse   # noqa: E402
 import json       # noqa: E402
 import pathlib    # noqa: E402
-import time       # noqa: E402
 
 import jax        # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -27,6 +26,7 @@ from repro.core import costmodel, hlo as hlo_lib  # noqa: E402
 from repro.launch.dryrun import RESULTS_DIR  # noqa: E402
 from repro.launch.mesh import (  # noqa: E402
     AxisType, make_mesh, make_production_mesh)
+from repro.perf.measure import now  # noqa: E402
 from repro.quantum import gates  # noqa: E402
 from repro.quantum.distributed import run_distributed  # noqa: E402
 
@@ -55,11 +55,11 @@ def main():
     def step(re, im):
         return run_distributed(re, im, circuit, flat, axis="amps")
 
-    t0 = time.time()
+    t0 = now()
     lowered = jax.jit(step, in_shardings=(sh, sh),
                       out_shardings=(sh, sh)).lower(re_s, im_s)
     compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = now() - t0
     mem = compiled.memory_analysis()
     report = hlo_lib.analyze_hlo(compiled.as_text(), total_devices=n_chips)
 

@@ -174,6 +174,11 @@ def validate_path(path: pathlib.Path) -> List[str]:
 
 
 def main(argv: Optional[List[str]] = None) -> int:
+    # reporting/exit contract shared with `python -m repro.analysis`:
+    # offending files print as `FAIL <path>` + indented `  - ` lines,
+    # clean files print nothing, the last line is a
+    # `<clean>/<scanned> files clean` summary; exit 0 = clean,
+    # 1 = findings, 2 = usage error / nothing to scan.
     args = [a for a in (argv if argv is not None else sys.argv[1:])
             if a != "--validate"]
     if not args:
@@ -188,7 +193,7 @@ def main(argv: Optional[List[str]] = None) -> int:
         files.extend(sorted(p.glob("*.json")) if p.is_dir() else [p])
     if not files:
         print("no JSON files to validate")
-        return 1
+        return 2
     n_bad = 0
     for f in files:
         errors = validate_path(f)
@@ -197,9 +202,7 @@ def main(argv: Optional[List[str]] = None) -> int:
             print(f"FAIL {f}")
             for e in errors:
                 print(f"  - {e}")
-        else:
-            print(f"ok   {f}")
-    print(f"{len(files) - n_bad}/{len(files)} reports valid")
+    print(f"{len(files) - n_bad}/{len(files)} files clean")
     return 1 if n_bad else 0
 
 

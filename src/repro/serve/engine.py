@@ -239,6 +239,12 @@ class ContinuousBatchingEngine:
     bitwise the unsharded engine.  A mesh whose slot axes do not divide
     ``n_slots`` serves replicated (one shard) and records the decision
     in ``sharding_meta``.
+
+    ``analyze=True`` compiles the decode/prefill step fns at build time
+    and runs the ``repro.analysis.trace`` cost-model lint over them
+    (gathers on the hot path, counter-blind scans, f32 upcasts, missed
+    donation, ...); the findings land in ``analysis_meta`` and
+    serve_bench copies them into its Report meta.
     """
 
     def __init__(self, model: LM, params, *, n_slots: int, max_len: int,
@@ -246,7 +252,8 @@ class ContinuousBatchingEngine:
                  page_budget: Optional[int] = None,
                  eos_id: Optional[int] = None, seed: int = 0,
                  prefix_cache: bool = False, prefix_pool: int = 8,
-                 mesh=None, rules=None, sp_kv: bool = False):
+                 mesh=None, rules=None, sp_kv: bool = False,
+                 analyze: bool = False):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -345,6 +352,17 @@ class ContinuousBatchingEngine:
         self._cost = StepCostModel(model.cfg, max_len)
         self.stats = EngineStats()
         self._results: Dict[int, np.ndarray] = {}
+        # opt-in build-time trace lint: compile the decode/prefill step
+        # fns ahead of the first request and run repro.analysis.trace's
+        # rules (hot gathers, predication density, counter-blind scans,
+        # f32 upcasts, host callbacks, missed donation) over the jaxpr +
+        # HLO.  The result rides in ``analysis_meta`` so serve_bench can
+        # record it next to the measured numbers.  Imported lazily:
+        # analyze=False engines never touch the analysis subsystem.
+        self.analysis_meta: Optional[Dict[str, Any]] = None
+        if analyze:
+            from repro.analysis.trace import analyze_serve_engine
+            self.analysis_meta = analyze_serve_engine(self)
 
     # -- mesh layout ------------------------------------------------------
     def _init_mesh_layout(self) -> None:

@@ -1,0 +1,391 @@
+"""repro.analysis: one known-bad fixture per rule, both layers.
+
+Layer 1 (source lint) fixtures are inline snippets run through
+``lint_source`` with fake repo-relative paths; layer 2 (trace lint)
+fixtures are tiny jitted functions whose compiled modules exhibit each
+mispriced pattern.  Plus: waiver suppression, reasonless-waiver load
+error, the clean-tree case, the engine ``analyze=True`` integration,
+and the shared CLI exit-code/format contract of ``python -m
+repro.analysis`` and ``python -m repro.perf --validate``.
+"""
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+pytestmark = pytest.mark.tier1
+
+from repro.analysis.findings import (  # noqa: E402
+    Finding, Waiver, apply_waivers, load_waivers)
+from repro.analysis.lint import SOURCE_RULES, lint_source  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _rules(src, rel):
+    return [f.rule for f in lint_source(textwrap.dedent(src), rel)]
+
+
+# ---------------------------------------------------------------------------
+# layer 1: one bad fixture per source rule
+# ---------------------------------------------------------------------------
+def test_timing_confinement_direct_call():
+    rules = _rules("""
+        import time
+        t0 = time.perf_counter()
+    """, "benchmarks/bad.py")
+    assert "timing-confinement" in rules
+
+
+def test_timing_confinement_module_alias():
+    rules = _rules("""
+        import time as _t
+        t0 = _t.time()
+    """, "src/repro/bad.py")
+    assert "timing-confinement" in rules
+
+
+def test_timing_confinement_from_import_alias():
+    # the exact bypass the old grep-based invariant test missed
+    fs = lint_source(textwrap.dedent("""
+        from time import perf_counter as _pc
+        t0 = _pc()
+    """), "examples/bad.py")
+    got = [f.rule for f in fs]
+    # both the import site and the call site are flagged
+    assert got.count("timing-confinement") == 2
+
+
+def test_timing_confinement_timeit():
+    assert "timing-confinement" in _rules(
+        "import timeit\n", "benchmarks/bad.py")
+
+
+def test_timing_allowed_in_measure():
+    rules = _rules("""
+        import time
+        t0 = time.perf_counter()
+    """, "src/repro/perf/measure.py")
+    assert "timing-confinement" not in rules
+
+
+def test_compat_bypass_mesh_constructor():
+    rules = _rules("""
+        from jax.sharding import Mesh
+        m = Mesh(devs, ("data",))
+    """, "src/repro/bad.py")
+    assert "compat-shim-bypass" in rules
+
+
+def test_compat_bypass_make_mesh_and_shard_map():
+    rules = _rules("""
+        import jax
+        m = jax.make_mesh((2,), ("data",))
+        f = jax.experimental.shard_map.shard_map
+    """, "src/repro/bad.py")
+    assert rules.count("compat-shim-bypass") == 2
+
+
+def test_compat_bypass_cost_analysis():
+    rules = _rules("cost = compiled.cost_analysis()\n", "benchmarks/bad.py")
+    assert "compat-shim-bypass" in rules
+
+
+def test_compat_allowed_in_shims():
+    rules = _rules("""
+        import jax
+        m = jax.make_mesh((2,), ("data",))
+    """, "src/repro/launch/mesh.py")
+    assert "compat-shim-bypass" not in rules
+
+
+def test_results_writer_bypass_in_benchmarks():
+    rules = _rules("""
+        import json
+        json.dump(rows, open("out.json", "w"))
+    """, "benchmarks/bad.py")
+    assert "results-writer-bypass" in rules
+
+
+def test_results_writer_fine_outside_benchmarks():
+    rules = _rules("""
+        import json
+        json.dump(rows, fh)
+    """, "src/repro/launch/dryrun.py")
+    assert "results-writer-bypass" not in rules
+
+
+def test_donation_hygiene_use_after_donation():
+    rules = _rules("""
+        import jax
+        step = jax.jit(fn, donate_argnums=(0,))
+        out = step(cache, tokens)
+        y = cache.sum()
+    """, "src/repro/bad.py")
+    assert "donation-hygiene" in rules
+
+
+def test_donation_hygiene_rebind_is_clean():
+    rules = _rules("""
+        import jax
+        step = jax.jit(fn, donate_argnums=(0,))
+        cache = step(cache, tokens)
+        y = cache.sum()
+    """, "src/repro/good.py")
+    assert "donation-hygiene" not in rules
+
+
+def test_parse_error_rule():
+    assert _rules("def broken(:\n", "src/repro/bad.py") == ["parse-error"]
+
+
+def test_every_source_rule_has_a_fixture_above():
+    covered = {"timing-confinement", "compat-shim-bypass",
+               "results-writer-bypass", "donation-hygiene", "parse-error"}
+    assert covered == set(SOURCE_RULES)
+
+
+# ---------------------------------------------------------------------------
+# waivers
+# ---------------------------------------------------------------------------
+def test_waiver_suppresses_matching_finding():
+    f_hit = Finding("timing-confinement", "error",
+                    "src/repro/perf/report.py", 77, "m")
+    f_other = Finding("timing-confinement", "error",
+                      "benchmarks/bad.py", 3, "m")
+    w = Waiver("timing-confinement", "src/repro/perf/report.py", "epoch ts")
+    unwaived, waived = apply_waivers([f_hit, f_other], [w])
+    assert [f.path for f in unwaived] == ["benchmarks/bad.py"]
+    assert [(f.path, wv.reason) for f, wv in waived] == [
+        ("src/repro/perf/report.py", "epoch ts")]
+
+
+def test_waiver_glob_and_line_pinning():
+    w_glob = Waiver("r", "src/repro/launch/*.py", "why")
+    w_line = Waiver("r", "a.py", "why", line=3)
+    assert w_glob.matches(Finding("r", "error",
+                                  "src/repro/launch/dryrun.py", 1, "m"))
+    assert not w_glob.matches(Finding("r", "error", "src/repro/x.py", 1, "m"))
+    assert w_line.matches(Finding("r", "error", "a.py", 3, "m"))
+    assert not w_line.matches(Finding("r", "error", "a.py", 4, "m"))
+
+
+def test_reasonless_waiver_is_a_load_error(tmp_path):
+    bad = tmp_path / "waivers.toml"
+    bad.write_text('[[waiver]]\nrule = "r"\npath = "a.py"\n')
+    with pytest.raises(ValueError, match="reason"):
+        load_waivers(bad)
+
+
+def test_missing_explicit_waiver_file_errors(tmp_path):
+    with pytest.raises(ValueError, match="not found"):
+        load_waivers(tmp_path / "nope.toml")
+
+
+def test_committed_baseline_loads_and_every_entry_has_reason():
+    for w in load_waivers():
+        assert w.reason.strip()
+
+
+# ---------------------------------------------------------------------------
+# clean tree / CLI contract
+# ---------------------------------------------------------------------------
+def test_clean_snippet_has_no_findings():
+    assert _rules("""
+        from repro.perf.measure import measure, now
+        t0 = now()
+    """, "benchmarks/good.py") == []
+
+
+def test_cli_contract(tmp_path, capsys):
+    from repro.analysis.cli import main as analysis_main
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("import time\nt0 = time.time()\n")
+    good = tmp_path / "good.py"
+    good.write_text("x = 1\n")
+    empty_waivers = tmp_path / "w.toml"
+    empty_waivers.write_text("")
+
+    rc = analysis_main(["--ci", "--root", str(tmp_path),
+                        "--waivers", str(empty_waivers),
+                        str(bad), str(good)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL" in out and "timing-confinement" in out
+    assert out.strip().splitlines()[-1] == (
+        "1/2 files clean; 1 finding(s) (0 waived)")
+
+    rc = analysis_main(["--ci", "--root", str(tmp_path),
+                        "--waivers", str(empty_waivers), str(good)])
+    assert rc == 0
+    # usage errors / nothing to scan exit 2
+    assert analysis_main([str(tmp_path / "missing.py")]) == 2
+
+
+def test_validate_cli_matches_linter_contract(tmp_path, capsys):
+    from repro.perf.report import main as validate_main
+
+    # usage error and empty scan both exit 2, like the linter
+    assert validate_main([]) == 2
+    capsys.readouterr()
+    assert validate_main(["--validate", str(tmp_path)]) == 2
+    capsys.readouterr()
+
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"not": "a report"}))
+    rc = validate_main(["--validate", str(bad)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert f"FAIL {bad}" in out
+    assert any(line.startswith("  - ") for line in out.splitlines())
+    assert out.strip().splitlines()[-1] == "0/1 files clean"
+
+
+def test_import_analysis_does_not_import_jax():
+    import subprocess
+    import sys
+    code = ("import sys; import repro.analysis; "
+            "sys.exit(1 if 'jax' in sys.modules else 0)")
+    proc = subprocess.run([sys.executable, "-c", code],
+                          cwd=str(ROOT), env={"PYTHONPATH": "src"})
+    assert proc.returncode == 0
+
+
+# ---------------------------------------------------------------------------
+# layer 2: one traced fixture per trace rule
+# ---------------------------------------------------------------------------
+def _trace(fn, *args, **kw):
+    from repro.analysis.trace import lint_trace, trace_program
+    lint_kw = {k: kw.pop(k) for k in list(kw)
+               if k in ("model_values_supplied", "verdicts",
+                        "select_frac_threshold", "f32_frac_threshold")}
+    return lint_trace(trace_program(fn, *args, **kw), **lint_kw)
+
+
+def test_trace_hot_gather():
+    import jax.numpy as jnp
+    import numpy as np
+
+    def f(x, idx):
+        return x[idx]
+
+    fs = _trace(f, jnp.arange(64.0), np.arange(8) % 3)
+    assert "hot-gather" in [f.rule for f in fs]
+
+
+def test_trace_predication_density():
+    import jax.numpy as jnp
+
+    def f(x):
+        y = jnp.where(x > 0, x, -x)
+        z = jnp.where(y > 1, y, y * 2)
+        return jnp.where(z > 2, z, z + 1)
+
+    fs = _trace(f, jnp.arange(8.0), select_frac_threshold=0.05)
+    assert "predication-density" in [f.rule for f in fs]
+
+
+def test_trace_scan_counter_blindness_severity_gates_on_model_values():
+    import jax
+    import jax.numpy as jnp
+
+    def f(x):
+        def body(c, _):
+            return c * 1.0001 + 1.0, None
+        out, _ = jax.lax.scan(body, x, None, length=64)
+        return out
+
+    unbacked = _trace(f, jnp.float32(1.0))
+    by_rule = {f.rule: f for f in unbacked}
+    assert by_rule["scan-counter-blindness"].severity == "error"
+
+    backed = _trace(f, jnp.float32(1.0), model_values_supplied=True)
+    by_rule = {f.rule: f for f in backed}
+    assert by_rule["scan-counter-blindness"].severity == "info"
+
+
+def test_trace_f32_upcast():
+    import jax.numpy as jnp
+
+    def f(x):
+        return (x.astype(jnp.float32) @ x.astype(jnp.float32).T).sum()
+
+    fs = _trace(f, jnp.ones((8, 8), jnp.bfloat16), f32_frac_threshold=0.25)
+    assert "f32-upcast" in [f.rule for f in fs]
+
+
+def test_trace_host_callback():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    def f(x):
+        return jax.pure_callback(
+            lambda v: np.asarray(v) * 2,
+            jax.ShapeDtypeStruct(x.shape, x.dtype), x)
+
+    fs = _trace(f, jnp.arange(4.0))
+    assert "host-callback" in [f.rule for f in fs]
+
+
+def test_trace_missed_donation():
+    import jax.numpy as jnp
+
+    def f(x):
+        return (x * 2.0).sum()          # scalar out: nothing can alias x
+
+    fs = _trace(f, jnp.arange(16.0), donate_argnums=(0,))
+    assert "missed-donation" in [f.rule for f in fs]
+
+
+def test_trace_clean_program():
+    import jax.numpy as jnp
+
+    def f(x, y):
+        return x + y                    # donated x aliases the output
+
+    fs = _trace(f, jnp.arange(8.0), jnp.arange(8.0), donate_argnums=(0,))
+    assert fs == []
+
+
+def test_every_trace_rule_has_a_fixture_above():
+    from repro.analysis.trace import TRACE_RULES
+    covered = {"hot-gather", "predication-density", "scan-counter-blindness",
+               "f32-upcast", "host-callback", "missed-donation"}
+    assert covered == set(TRACE_RULES)
+
+
+# ---------------------------------------------------------------------------
+# serve-engine integration (the analyze=True path serve_bench records)
+# ---------------------------------------------------------------------------
+def test_engine_analyze_meta():
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.models import build_model
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    cfg = reduced_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                   prefill_chunk=8, analyze=True)
+    meta = eng.analysis_meta
+    assert meta is not None
+    assert set(meta["programs"]) == {"decode_step", "prefill_row"}
+    decode = meta["programs"]["decode_step"]
+    # the paged decode path runs on gathers — the artifact must say so
+    assert any(row["rule"] == "hot-gather" for row in decode["findings"])
+    # the engine's StepCostModel backs the counters: scan blindness is
+    # informational, never an error, on the analyze=True path
+    assert all(row["severity"] != "error"
+               for p in meta["programs"].values() for row in p["findings"])
+    assert meta["n_findings"] >= 1 and meta["worst_severity"] == "warning"
+    assert set(meta["verdicts"])      # Table-1 verdicts rode along
+    # it's JSON-serializable (serve_bench writes it into Report meta)
+    json.dumps(meta)
+    # analyze=False (default) engines never build the block
+    eng2 = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32)
+    assert eng2.analysis_meta is None
