@@ -28,15 +28,26 @@ roofline_fraction``) — so per-family speedups are roofline-attributable,
 not just tokens/s.  Rows land in benchmarks/results/serve_bench.json in
 the canonical Report schema.
 
-The **shared-prefix scenario** (always appended on the lm run; the only
-thing run under ``REPRO_BENCH_SMOKE=1``, at tiny shapes) serves a
-workload whose requests share a long common prompt prefix through two
-continuous engines — prefix cache on vs off — interleaved through
+The **shared-prefix scenario** (always appended on the lm run; run at
+tiny shapes under ``REPRO_BENCH_SMOKE=1``) serves a workload whose
+requests share a long common prompt prefix through two continuous
+engines — prefix cache on vs off — interleaved through
 ``perf.measure``; rows report ``prefix_hit_tokens`` / ``prefix_hit_rate``
 and ``speedup_vs_nocache``.  The paper's premise makes this the
 highest-leverage serve optimization: prefill-style compute is exactly
 where RVV autovectorization is weakest, so the best prefill is the one
 the page table lets you skip.
+
+The **paged-kernel scenario** (appended on the lm run and on the CI
+smoke) races the fused paged flash-decode attention kernel (engine
+default) against the dense XLA gather-then-attend decode
+(``paged_kernel=False``) on the high-variance mix, both with
+``analyze=True``: rows carry ``speedup_vs_xla`` and
+``roofline_utilization``; the Report meta's ``paged`` block carries
+each contender's compiled-program trace-lint verdict, the
+expected-findings contract (baseline decode must show ``hot-gather``,
+paged decode must not), and the autotuned ``block_pages`` pick from
+``benchmarks/results/autotune_cache.json`` (``--retune`` re-measures).
 
 The **sharded scenario** (``--sharded``; its own
 ``serve_bench_sharded.json`` artifact) runs the same workload through
@@ -110,6 +121,17 @@ SHARDED_SCENARIO = dict(slots=4, prompt_band=(8, 29), gen_band=(8, 25),
                         n_req=12)
 SHARDED_SCENARIO_SMOKE = dict(slots=2, prompt_band=(4, 9), gen_band=(3, 6),
                               n_req=4)
+
+# paged-kernel scenario: the same workload through two continuous
+# engines — paged flash-decode kernel vs the XLA gather-then-attend
+# baseline (paged_kernel=False) — as equal interleaved contenders.
+# Full shapes reuse the high-variance mixed_gens bands; both engines
+# build with analyze=True so the Report meta carries the trace-lint
+# split (hot-gather present on the baseline decode, absent on paged).
+PAGED_SCENARIO = dict(slots=4, prompt_band=(8, 33), gen_band=(2, 97),
+                      n_req=24)
+PAGED_SCENARIO_SMOKE = dict(slots=2, prompt_band=(4, 9), gen_band=(3, 6),
+                            n_req=6)
 
 
 def _workload(rng, n, p_band, g_band, vocab):
@@ -274,6 +296,77 @@ def _prefix_rows(cfg, model, params, sc: Dict, family: str = "lm"
     return rows, analysis
 
 
+def _paged_rows(cfg, model, params, sc: Dict, family: str = "lm", *,
+                retune: bool = False) -> Tuple[List[Dict], Dict]:
+    """One workload through two continuous engines — paged flash-decode
+    kernel (default) vs the dense XLA gather-then-attend decode
+    (``paged_kernel=False``) — as equal interleaved contenders through
+    ``measure_group``.
+
+    Both engines build with ``analyze=True``: the returned meta block
+    carries each engine's trace-lint verdict on the very compiled decode
+    program the rows time, plus the expected-findings contract (the
+    baseline decode gathers KV pages per step → ``hot-gather``; the
+    paged decode walks the page-index array inside the kernel and
+    embeds via one-hot matmul → no gather at all) and the autotuned
+    ``block_pages`` pick from the persistent cache."""
+    page = 8
+    rng = np.random.default_rng(19)
+    reqs = _workload(rng, sc["n_req"], sc["prompt_band"], sc["gen_band"],
+                     cfg.vocab_size)
+    max_len = -(-(max(sc["prompt_band"]) + max(sc["gen_band"])) // page) * page
+
+    engines = {
+        "paged": ContinuousBatchingEngine(
+            model, params, n_slots=sc["slots"], max_len=max_len,
+            page_size=page, prefill_chunk=8, analyze=True,
+            paged_kernel=True, retune=retune),
+        "xla": ContinuousBatchingEngine(
+            model, params, n_slots=sc["slots"], max_len=max_len,
+            page_size=page, prefill_chunk=8, analyze=True,
+            paged_kernel=False),
+    }
+
+    def _pass(eng):
+        def setup():
+            eng.reset()
+            for prompt, glen in reqs:
+                eng.submit(prompt, glen)
+        return (eng.run, (), setup)
+
+    ms = measure_group({name: _pass(eng) for name, eng in engines.items()},
+                       reps=REPEATS, warmup=1, jit=False)
+
+    kernel_label = {"paged": "paged_flash_decode", "xla": "xla_gather"}
+    rows = []
+    base = ms["xla"].median_s
+    for name, eng in engines.items():
+        s = eng.stats.summary()          # last pass (reset per repeat)
+        m = ms[name]
+        rows.append({
+            "family": family, "arch": cfg.arch_id, "mix": "paged_vs_xla",
+            "engine": "continuous", "kernel": kernel_label[name],
+            "slots": sc["slots"], "requests": sc["n_req"],
+            "tok_per_s": s["generated_tokens"] / m.median_s,
+            "wall_s_median": m.median_s,
+            "wall_s_all": [round(w, 4) for w in m.all_s],
+            "generated_tokens": s["generated_tokens"],
+            "speedup_vs_xla": base / m.median_s,
+            "model_flops": s["model_flops"],
+            "model_bytes": s["model_bytes"],
+            "roofline_utilization": roofline_fraction(
+                s["model_flops"], s["model_bytes"], m.median_s)})
+    meta = {
+        "engines": {name: eng.analysis_meta
+                    for name, eng in engines.items()},
+        # rules that MUST appear / MUST NOT appear on each contender's
+        # decode program — ci.sh --bench-smoke enforces this split
+        "expected_findings": {"paged": [], "xla": ["hot-gather"]},
+        "autotune": engines["paged"].paged_meta,
+    }
+    return rows, meta
+
+
 def _sharded_mesh(count: int, sp_kv: bool):
     if count == 1:
         return None                      # the strict single-device path
@@ -375,7 +468,8 @@ def run(measure: bool = True,
         families: Optional[List[str]] = None,
         prefix_only: bool = False,
         sharded: bool = False,
-        sp_kv: bool = False) -> List[Dict]:
+        sp_kv: bool = False,
+        retune: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
     if sharded:
@@ -415,16 +509,23 @@ def run(measure: bool = True,
               "slot shards decode in parallel; Report meta records each "
               "engine's resolved layout + forced replications.")
         return rows
+    paged_meta: Optional[Dict] = None
     if smoke or prefix_only:
-        # CI smoke (scripts/ci.sh --bench-smoke) / --prefix-only: just the
+        # CI smoke (scripts/ci.sh --bench-smoke) / --prefix-only: the
         # shared-prefix scenario at tiny shapes, through the same Report
-        # write path so the schema gate judges a real artifact
+        # write path so the schema gate judges a real artifact; the smoke
+        # additionally races the paged kernel vs the XLA-gather decode so
+        # the gate can enforce the expected-findings split
         cfg = reduced_config(ARCH)
         model = build_model(cfg)
         params = model.init_params(jax.random.key(0))
         rows, analysis = _prefix_rows(cfg, model, params,
                                       PREFIX_SCENARIO_SMOKE if smoke
                                       else PREFIX_SCENARIO)
+        if smoke:
+            paged_rows, paged_meta = _paged_rows(
+                cfg, model, params, PAGED_SCENARIO_SMOKE, retune=retune)
+            rows += paged_rows
     elif families:
         analysis = None                  # mix-only rows, no traced engine
         if "all" in families:
@@ -447,13 +548,19 @@ def run(measure: bool = True,
         prefix_rows, analysis = _prefix_rows(cfg, model, params,
                                              PREFIX_SCENARIO)
         rows += prefix_rows
+        paged_rows, paged_meta = _paged_rows(cfg, model, params,
+                                             PAGED_SCENARIO, retune=retune)
+        rows += paged_rows
     common.save_result("serve_bench", rows,
                        meta={"reduced": True, "repeats": REPEATS,
                              "statistic": "median", "smoke": smoke,
                              "families": families or ["lm"],
-                             "analysis": analysis})
-    classic = [r for r in rows if r["mix"] != "shared_prefix"]
+                             "analysis": analysis,
+                             "paged": paged_meta})
+    classic = [r for r in rows
+               if r["mix"] not in ("shared_prefix", "paged_vs_xla")]
     prefix = [r for r in rows if r["mix"] == "shared_prefix"]
+    paged = [r for r in rows if r["mix"] == "paged_vs_xla"]
     if classic:
         common.print_table(
             "serving throughput: continuous batching vs static (reduced, "
@@ -477,6 +584,19 @@ def run(measure: bool = True,
         print("-> prefix_hit_rate = prompt tokens served by donor-row "
               "copies / all prompt tokens; prefill compute skipped "
               "entirely for hit tokens (the paper's weakest RVV path).")
+    if paged:
+        common.print_table(
+            "paged flash-decode kernel vs XLA gather decode (continuous "
+            "engine, median of interleaved repeats)", paged,
+            ["kernel", "generated_tokens", "tok_per_s", "speedup_vs_xla",
+             "roofline_utilization"],
+            widths={"kernel": 18, "speedup_vs_xla": 15,
+                    "roofline_utilization": 21})
+        print("-> both contenders decode the same page table; the paged "
+              "kernel walks the page-index array inside the attention "
+              "kernel (no per-step KV gather, embed via one-hot matmul) "
+              "— Report meta records each decode program's trace-lint "
+              "findings and the autotuned block_pages pick.")
     return rows
 
 
@@ -497,7 +617,11 @@ if __name__ == "__main__":
     ap.add_argument("--sp-kv", action="store_true",
                     help="sharded scenario uses (data x model) meshes "
                          "and shards the KV sequence axis too")
+    ap.add_argument("--retune", action="store_true",
+                    help="force re-measurement of the paged-kernel "
+                         "block_pages sweep (ignore "
+                         "benchmarks/results/autotune_cache.json)")
     args = ap.parse_args()
     run(families=args.families.split(",") if args.families else None,
         prefix_only=args.prefix_only, sharded=args.sharded,
-        sp_kv=args.sp_kv)
+        sp_kv=args.sp_kv, retune=args.retune)

@@ -52,16 +52,44 @@ PY
         REPRO_BENCH_SMOKE=1 python -m benchmarks.serve_bench --sharded
     python -m repro.perf --validate benchmarks/results
     # the serve artifact must carry the trace-lint verdict on the very
-    # decode program it timed (ContinuousBatchingEngine(analyze=True))
+    # decode programs it timed (ContinuousBatchingEngine(analyze=True)),
+    # and the paged-vs-xla contenders must land on the expected sides of
+    # the hot-gather split: the XLA gather decode shows the finding the
+    # paged flash-decode kernel exists to remove; the paged decode (the
+    # engine default, also backing the shared-prefix engines) must not
     python - <<'PY'
 import json
 meta = json.load(open("benchmarks/results/serve_bench.json"))["meta"]
+
+def rules(program):
+    return sorted({f["rule"] for f in program["findings"]})
+
+# baseline block: the shared-prefix engine traces paged-by-default now,
+# so its decode program must already be hot-gather clean
 analysis = meta["analysis"]
-decode = analysis["programs"]["decode_step"]
-assert decode["findings"], "decode_step trace lint produced no findings"
-print(f"[bench-smoke] serve_bench analysis block ok: "
-      f"{analysis['n_findings']} finding(s), "
-      f"worst={analysis['worst_severity']}")
+assert analysis and analysis["programs"], "analysis block missing"
+base_decode = rules(analysis["programs"]["decode_step"])
+assert "hot-gather" not in base_decode, (
+    f"default (paged) decode_step still gathers: {base_decode}")
+
+paged = meta["paged"]
+assert paged and paged["engines"], "paged contender block missing"
+per_engine = {name: rules(a["programs"]["decode_step"])
+              for name, a in paged["engines"].items()}
+assert "hot-gather" in per_engine["xla"], (
+    f"xla-gather decode lost its hot-gather finding: {per_engine['xla']}")
+assert "hot-gather" not in per_engine["paged"], (
+    f"paged decode_step still gathers: {per_engine['paged']}")
+for name, expected in paged["expected_findings"].items():
+    missing = [r for r in expected if r not in per_engine[name]]
+    assert not missing, f"{name} decode missing expected {missing}"
+tune = paged["autotune"]
+assert tune and tune.get("block_pages"), "autotune pick missing"
+for name, got in sorted(per_engine.items()):
+    print(f"[bench-smoke] {name} decode findings: {got or 'none'}")
+print(f"[bench-smoke] paged-kernel split ok; autotune "
+      f"block_pages={tune['block_pages']} ({tune['source']}, "
+      f"key={tune['key']})")
 PY
     exit 0
 fi

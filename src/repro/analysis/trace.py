@@ -307,11 +307,17 @@ def analyze_serve_engine(engine, *, calibration=None) -> Dict[str, Any]:
     prev_s = sds((n,), i32)
     # decode: (params, cache, out_buf, prev_sampled, tokens, token_src,
     #          positions, n_valid, temperatures, out_rows, out_idx,
-    #          step_idx, any_temp[static])
+    #          step_idx, any_temp[static][, page_idx])
     decode_args = (params_s, cache_s, out_s, prev_s, sds((n, 1), i32),
                    sds((n,), jnp.bool_), sds((n, 1), i32), sds((n,), i32),
                    sds((n,), f32), sds((n,), i32), sds((n,), i32),
                    sds((), i32), False)
+    paged = bool(getattr(engine, "paged_kernel", False))
+    if paged:
+        # the paged engine's decode step takes the page-index device
+        # array as a trailing argument (any_temp stays static at 12)
+        decode_args = decode_args + (
+            sds(tuple(engine._page_idx.shape), i32),)
     # prefill row: (params, cache, out_buf, prev_sampled, slot, tokens,
     #               positions, n_valid, temperature, out_row, out_idx,
     #               step_idx, any_temp[static])
@@ -348,4 +354,6 @@ def analyze_serve_engine(engine, *, calibration=None) -> Dict[str, Any]:
             "verdicts": dict(cal.verdicts),
             "programs": programs,
             "n_findings": n_findings,
-            "worst_severity": worst}
+            "worst_severity": worst,
+            "paged_kernel": paged,
+            "paged": getattr(engine, "paged_meta", None)}

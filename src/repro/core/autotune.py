@@ -17,11 +17,22 @@ half — it times real candidate callables through ``repro.perf.measure``
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Tuple
+import functools
+import json
+import pathlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 from repro.core.costmodel import TPU_V5E, HWSpec
 from repro.kernels.common import MXU, SUBLANE, VALID_MULTIPLIERS
 from repro.perf.measure import measure_group
+
+# On-disk best-config cache: a schema-valid perf Report (rows =
+# {key, best, medians_s, reps}) so `python -m repro.perf --validate`
+# accepts it alongside every other benchmarks/results artifact and the
+# ci.sh legacy-pruner keeps it.  Repeated serve runs skip the sweep;
+# retune=True forces re-measurement (serve_bench exposes --retune).
+AUTOTUNE_CACHE_PATH = (pathlib.Path(__file__).resolve().parents[3]
+                       / "benchmarks" / "results" / "autotune_cache.json")
 
 
 @dataclasses.dataclass
@@ -81,6 +92,110 @@ def measured_sweep(candidates: Dict[str, Tuple[Callable, tuple]],
     """
     return {name: m.median_s
             for name, m in measure_group(candidates, reps=reps).items()}
+
+
+# -- persistent best-config cache -------------------------------------------
+def _load_cache_rows(path: pathlib.Path) -> List[Dict[str, Any]]:
+    try:
+        payload = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return []
+    if not isinstance(payload, dict) \
+            or payload.get("schema") != "repro.perf.report":
+        return []
+    rows = payload.get("rows")
+    return rows if isinstance(rows, list) else []
+
+
+def _write_cache_rows(path: pathlib.Path,
+                      rows: List[Dict[str, Any]]) -> None:
+    from repro.perf import report as perf_report
+    rep = perf_report.make_report(
+        "autotune_cache", rows,
+        meta={"writer": "repro.core.autotune.cached_best_config",
+              "statistic": "median_s (interleaved measured_sweep)"})
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(rep.to_json())
+
+
+def cached_best_config(key: str,
+                       candidates: Dict[str, Tuple[Callable, tuple]], *,
+                       reps: int = 3, retune: bool = False,
+                       cache_path: Optional[pathlib.Path] = None
+                       ) -> Dict[str, Any]:
+    """``measured_sweep`` with an on-disk memo.
+
+    A cache row matches when its ``key`` AND candidate-label set agree
+    (a changed candidate grid invalidates the row).  Returns
+    ``{key, best, medians_s, reps, source}`` with ``source`` one of
+    ``"cache"`` / ``"measured"``.
+    """
+    path = pathlib.Path(cache_path) if cache_path else AUTOTUNE_CACHE_PATH
+    rows = _load_cache_rows(path)
+    labels = sorted(candidates)
+    if not retune:
+        for row in rows:
+            if (row.get("key") == key
+                    and sorted(row.get("medians_s", {})) == labels):
+                return {**row, "source": "cache"}
+    medians = measured_sweep(candidates, reps=reps)
+    row = {"key": key, "best": min(medians, key=medians.get),
+           "medians_s": {k: float(v) for k, v in medians.items()},
+           "reps": reps}
+    _write_cache_rows(path,
+                      [r for r in rows if r.get("key") != key] + [row])
+    return {**row, "source": "measured"}
+
+
+def tune_paged_attention(*, n_slots: int, max_len: int, page_size: int,
+                         n_kv_heads: int, n_q_heads: int, head_dim: int,
+                         dtype: str, impl: Optional[str] = None,
+                         reps: int = 3, retune: bool = False,
+                         cache_path: Optional[pathlib.Path] = None
+                         ) -> Dict[str, Any]:
+    """Sweep ``block_pages`` (pages streamed per tile) for the paged
+    flash-decode kernel at the engine's decode shapes.
+
+    Keyed on (head_dim, n_kv_heads, page_size, dtype) plus
+    pages_per_seq — engines with different cache lengths have different
+    candidate grids, so they cache separately rather than thrash one
+    row.  Candidates are full-cache decode calls timed as interleaved
+    contenders (``measured_sweep``); impl/backend resolution matches
+    what the engine will actually run.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.paged_attention import ops as pa_ops
+
+    pps = max_len // page_size
+    key = (f"paged_attention/hd{head_dim}/nkv{n_kv_heads}"
+           f"/g{max(n_q_heads // n_kv_heads, 1)}/page{page_size}"
+           f"/pps{pps}/{dtype}/{pa_ops.resolve_impl(impl)}")
+    jdt = jnp.dtype(dtype)
+    k0 = jax.random.key(0)
+    q = jax.random.normal(
+        k0, (n_slots, 1, n_q_heads, head_dim), jnp.float32).astype(jdt)
+    kp = jax.random.normal(
+        jax.random.fold_in(k0, 1),
+        (n_slots * pps, page_size, n_kv_heads, head_dim),
+        jnp.float32).astype(jdt)
+    vp = jax.random.normal(
+        jax.random.fold_in(k0, 2), kp.shape, jnp.float32).astype(jdt)
+    idx = jnp.arange(n_slots * pps, dtype=jnp.int32).reshape(n_slots, pps)
+    positions = jnp.full((n_slots, 1), max_len - 1, jnp.int32)
+    valid = jnp.full((n_slots,), max_len, jnp.int32)
+    bps = sorted({bp for bp in (1, 2, 4, 8, pps)
+                  if 1 <= bp <= pps and pps % bp == 0})
+    candidates = {
+        f"bp{bp}": (functools.partial(
+            pa_ops.paged_attention, page_size=page_size, block_pages=bp,
+            impl=impl), (q, kp, vp, idx, positions, valid))
+        for bp in bps}
+    res = cached_best_config(key, candidates, reps=reps, retune=retune,
+                             cache_path=cache_path)
+    return {"key": res["key"], "best": res["best"],
+            "block_pages": int(res["best"][2:]),
+            "medians_s": res["medians_s"], "source": res["source"]}
 
 
 # -- footprint builders for the shipped kernels -----------------------------

@@ -1,6 +1,8 @@
 """Fused flash attention (TPU Pallas): prefill/train forward + decode.
 
-Layout: (B*NH, S, H) with GQA expansion done in ops.py.  Grid is
+Layout: (B*NKV, G*S, H) with GQA handled by query *grouping* in ops.py
+(no K/V head materialization — each program streams its one KV head for
+all G query heads that share it).  Grid is
 (batch*heads, q_blocks, kv_blocks) with the kv dim minor (sequential), so
 the online-softmax state (m, l, acc) lives in VMEM scratch across kv steps
 — the TPU-native counterpart of the jnp reference in
@@ -29,7 +31,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   causal, softcap, scale, kv_steps, block_q, block_kv,
-                  skv_real):
+                  skv_real, sq_real):
     i = pl.program_id(1)
     j = pl.program_id(2)
 
@@ -52,8 +54,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             preferred_element_type=jnp.float32) * scale    # (bq, bk)
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
-        q_pos = i * block_q + jax.lax.broadcasted_iota(
-            jnp.int32, (block_q, block_kv), 0)
+        # with grouped GQA queries (ops._group) row r is query column
+        # r % sq_real; for ungrouped input sq_real == n_rows and the rem
+        # is the identity
+        q_pos = jax.lax.rem(
+            i * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0), sq_real)
         kv_pos = j * block_kv + jax.lax.broadcasted_iota(
             jnp.int32, (block_q, block_kv), 1)
         mask = kv_pos < skv_real
@@ -84,8 +90,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 def flash_attention_fwd(q, k, v, *, causal=True, softcap=0.0,
-                        block_q=512, block_kv=512, interpret=True):
-    """q: (BN, Sq, H); k/v: (BN, Skv, H) (GQA pre-expanded)."""
+                        block_q=512, block_kv=512, sq_real=None,
+                        interpret=True):
+    """q: (BN, R, H); k/v: (BN, Skv, H).  With GQA-grouped queries
+    (ops._group) R = G*Sq and ``sq_real=Sq`` maps row r to query column
+    r % Sq; the causal block-skip bound (row index >= column) stays a
+    superset of the needed tiles, the in-tile mask stays exact."""
     BN, Sq, H = q.shape
     Skv = k.shape[1]
     block_q = min(block_q, Sq)
@@ -94,7 +104,8 @@ def flash_attention_fwd(q, k, v, *, causal=True, softcap=0.0,
     grid = (BN, cdiv(Sq, block_q), kv_steps)
     kern = functools.partial(
         _flash_kernel, causal=causal, softcap=softcap, scale=H ** -0.5,
-        kv_steps=kv_steps, block_q=block_q, block_kv=block_kv, skv_real=Skv)
+        kv_steps=kv_steps, block_q=block_q, block_kv=block_kv, skv_real=Skv,
+        sq_real=sq_real or Sq)
     return pl.pallas_call(
         kern,
         grid=grid,
@@ -134,22 +145,22 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
 
     @pl.when(visit)
     def _attend():
-        q = q_ref[0].astype(jnp.float32)                    # (1, H)
+        q = q_ref[0].astype(jnp.float32)                    # (G, H)
         k = k_ref[0].astype(jnp.float32)                    # (bk, H)
         v = v_ref[0].astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
-            preferred_element_type=jnp.float32) * scale     # (1, bk)
+            preferred_element_type=jnp.float32) * scale     # (G, bk)
         if softcap:
             s = softcap * jnp.tanh(s / softcap)
         kv_pos = j * block_kv + jax.lax.broadcasted_iota(
             jnp.int32, (1, block_kv), 1)
         s = jnp.where(kv_pos < valid, s, NEG_INF)
-        m_prev = m_ref[:1, :1]
+        m_prev = m_ref[:, :1]                               # (G, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
         corr = jnp.exp(m_prev - m_new)
         p = jnp.exp(s - m_new)
-        l_new = l_ref[:1, :1] * corr + jnp.sum(p, -1, keepdims=True)
+        l_new = l_ref[:, :1] * corr + jnp.sum(p, -1, keepdims=True)
         acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32)
@@ -159,13 +170,14 @@ def _decode_kernel(valid_ref, q_ref, k_ref, v_ref, o_ref,
     @pl.when(j == kv_steps - 1)
     def _store():
         o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[:1, :1], 1e-30)).astype(o_ref.dtype)
+                    jnp.maximum(l_ref[:, :1], 1e-30)).astype(o_ref.dtype)
 
 
 def flash_decode(q, k, v, kv_valid, *, softcap=0.0, block_kv=1024,
                  interpret=True):
-    """q: (BN, 1, H); k/v: (BN, S, H); kv_valid: (BN,) int32 valid lengths."""
-    BN, _, H = q.shape
+    """q: (BN, G, H) — GQA-grouped, all G query heads sharing one KV head
+    ride one program; k/v: (BN, S, H); kv_valid: (BN,) int32 lengths."""
+    BN, G, H = q.shape
     S = k.shape[1]
     block_kv = min(block_kv, S)
     kv_steps = cdiv(S, block_kv)
@@ -177,16 +189,16 @@ def flash_decode(q, k, v, kv_valid, *, softcap=0.0, block_kv=1024,
         grid=(BN, kv_steps),
         in_specs=[
             pl.BlockSpec((1, 1), lambda b, j: (b, 0)),
-            pl.BlockSpec((1, 1, H), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, G, H), lambda b, j: (b, 0, 0)),
             pl.BlockSpec((1, block_kv, H), lambda b, j: (b, j, 0)),
             pl.BlockSpec((1, block_kv, H), lambda b, j: (b, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, H), lambda b, j: (b, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((BN, 1, H), q.dtype),
+        out_specs=pl.BlockSpec((1, G, H), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BN, G, H), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((1, LANE), jnp.float32),
-            pltpu.VMEM((1, LANE), jnp.float32),
-            pltpu.VMEM((1, H), jnp.float32),
+            pltpu.VMEM((G, LANE), jnp.float32),
+            pltpu.VMEM((G, LANE), jnp.float32),
+            pltpu.VMEM((G, H), jnp.float32),
         ],
         interpret=interpret,
     )(kv_valid.reshape(BN, 1).astype(jnp.int32), q, k, v)

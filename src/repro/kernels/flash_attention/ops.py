@@ -1,4 +1,13 @@
-"""Jit'd wrappers: GQA expansion + layout + the fused kernels."""
+"""Jit'd wrappers: grouped-GQA layout + the fused kernels.
+
+GQA head handling is a *query* regrouping, not a K/V copy: queries
+reshape to ``(B*NKV, G*Sq, H)`` so every program streams its one KV head
+once for all G query heads sharing it.  The old ``_expand`` idiom
+(``jnp.repeat`` of K/V up to NQ heads) materialized G copies of the
+cache in HBM on every prefill — it survives only as
+:func:`_oracle_expand` for the test oracles, which are allowed to be
+slow and dense.
+"""
 from __future__ import annotations
 
 import functools
@@ -10,8 +19,27 @@ from repro.kernels.common import interpret_default
 from repro.kernels.flash_attention import kernel as K
 
 
-def _expand(q, k, v):
-    """(B,S,N,H)-layout -> (B*NQ, S, H) with KV broadcast to query heads."""
+def _group(q, k, v):
+    """(B,S,N,H)-layout -> q (B*NKV, G*Sq, H), k/v (B*NKV, Skv, H).
+
+    Pure reshape/transpose — no head materialization.  Grouped q row
+    ``r`` is query head ``g = r // Sq`` at column ``c = r % Sq``; global
+    head order is ``n = kv * G + g``, identical to ``jnp.repeat`` head
+    order, so outputs reshape straight back.
+    """
+    B, Sq, NQ, H = q.shape
+    NKV = k.shape[2]
+    G = NQ // NKV
+    qT = q.reshape(B, Sq, NKV, G, H).transpose(0, 2, 3, 1, 4)
+    qT = qT.reshape(B * NKV, G * Sq, H)
+    kT = k.transpose(0, 2, 1, 3).reshape(B * NKV, -1, H)
+    vT = v.transpose(0, 2, 1, 3).reshape(B * NKV, -1, H)
+    return qT, kT, vT, (B, NKV, G, Sq, H)
+
+
+def _oracle_expand(q, k, v):
+    """(B,S,N,H)-layout -> (B*NQ, S, H) with K/V *materialized* per query
+    head.  Test-oracle helper only — the fused paths never copy K/V."""
     B, Sq, NQ, H = q.shape
     NKV = k.shape[2]
     G = NQ // NKV
@@ -28,11 +56,13 @@ def _expand(q, k, v):
 def flash_attention(q, k, v, *, causal=True, softcap=0.0, block_q=512,
                     block_kv=512, interpret=None):
     """q: (B, Sq, NQ, H); k/v: (B, Skv, NKV, H) -> (B, Sq, NQ, H)."""
-    qT, kT, vT, (B, NQ, Sq, H) = _expand(q, k, v)
+    qT, kT, vT, (B, NKV, G, Sq, H) = _group(q, k, v)
     out = K.flash_attention_fwd(
         qT, kT, vT, causal=causal, softcap=softcap, block_q=block_q,
-        block_kv=block_kv, interpret=interpret_default(interpret))
-    return out.reshape(B, NQ, Sq, H).transpose(0, 2, 1, 3)
+        block_kv=block_kv, sq_real=Sq,
+        interpret=interpret_default(interpret))
+    out = out.reshape(B, NKV, G, Sq, H)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, NKV * G, H)
 
 
 @functools.partial(jax.jit, static_argnames=("softcap", "block_kv",
@@ -40,9 +70,9 @@ def flash_attention(q, k, v, *, causal=True, softcap=0.0, block_q=512,
 def flash_decode(q, k, v, kv_valid, *, softcap=0.0, block_kv=1024,
                  interpret=None):
     """q: (B, 1, NQ, H); k/v cache: (B, S, NKV, H); kv_valid: (B,)."""
-    qT, kT, vT, (B, NQ, _, H) = _expand(q, k, v)
-    valid = jnp.repeat(kv_valid, NQ)
+    qT, kT, vT, (B, NKV, G, _, H) = _group(q, k, v)
+    valid = jnp.repeat(kv_valid, NKV)
     out = K.flash_decode(qT, kT, vT, valid, softcap=softcap,
                          block_kv=block_kv,
                          interpret=interpret_default(interpret))
-    return out.reshape(B, NQ, 1, H).transpose(0, 2, 1, 3)
+    return out.reshape(B, 1, NKV * G, H)

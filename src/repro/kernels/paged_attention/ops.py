@@ -1,0 +1,219 @@
+"""Jit'd wrappers: paged flash-decode dispatch, partials, and combine.
+
+Two implementations behind one signature (``impl=`` static kwarg):
+
+- ``"pallas"`` — the fused kernel in kernel.py: walks any page-index
+  layout via scalar-prefetch BlockSpecs (interpret mode off-TPU).
+- ``"xla"`` — the host/CPU hot path, specialized to the engine's
+  *identity* page layout: the pool reshapes back into the dense
+  ``(B, L, NKV, H)`` cache view (a zero-copy view, **no gather op**),
+  and attention runs as a grouped-GQA online-softmax ``lax.scan`` over
+  ``block_kv``-sized page tiles — no ``jnp.repeat`` of K/V heads, no
+  materialized gathered cache.  Callers passing a non-identity
+  ``page_idx`` to this impl get a loud error, not silent corruption.
+
+``impl=None`` auto-resolves: pallas on TPU backends, xla elsewhere.
+``block_pages`` (pages streamed per tile) is the autotuned knob —
+``core.autotune.tune_paged_attention`` sweeps it through
+``measured_sweep`` and caches the winner on disk.
+
+``decode_partials`` is the SP-KV half: grouped (m, l, acc) partials over
+a dense KV shard, combined across shards by pmax/psum in
+``models/attention._attn_decode_spkv``; ``combine_partials`` is the same
+fold over an explicit list (used by the associativity tests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import interpret_default
+from repro.kernels.paged_attention import kernel as K
+
+NEG_INF = -1e30
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    if impl is not None:
+        return impl
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _tile_partial(qg, k, v, mask, *, scale, softcap):
+    """One grouped attention tile.  qg: (B, NKV, G, Sq, H) fp32;
+    k/v: (B, Ck, NKV, H); mask: (B, 1, 1, Sq, Ck) bool.
+    Returns (m, l, acc): (B, NKV, G, Sq) x2 + (B, NKV, G, Sq, H), fp32."""
+    s = jnp.einsum("bngqh,bknh->bngqk", qg, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bngqk,bknh->bngqh", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def _xla_partials(q, k, v, positions, kv_valid, *, softcap, block_kv,
+                  kv_offset=None):
+    """Grouped online-softmax partials over a dense (B, L, NKV, H) slice.
+
+    ``block_kv`` tiles the KV length with a lax.scan carry (online
+    softmax); ``None``/full-length collapses to a single tile.
+    ``kv_offset`` (scalar or (B,), may be traced) shifts the absolute KV
+    positions — the SP-KV per-shard case.  Returns (m, l, acc) shaped
+    (B, NKV, G, Sq) / (B, NKV, G, Sq) / (B, NKV, G, Sq, H), fp32.
+    """
+    B, Sq, NQ, H = q.shape
+    L, NKV = k.shape[1], k.shape[2]
+    G = NQ // NKV
+    qg = q.reshape(B, Sq, NKV, G, H).transpose(0, 2, 3, 1, 4)
+    qg = qg.astype(jnp.float32)                       # (B, NKV, G, Sq, H)
+    scale = H ** -0.5
+    if kv_offset is None:
+        kv_offset = jnp.zeros((), jnp.int32)
+    off = jnp.asarray(kv_offset, jnp.int32)                # scalar or (B,)
+
+    def mask_for(kv0, ck):
+        kv_pos = kv0 + jnp.arange(ck, dtype=jnp.int32)     # local tile
+        if off.ndim:
+            kv_pos = kv_pos[None, :] + off[:, None]        # (B, ck)
+        else:
+            kv_pos = (kv_pos + off)[None, :]
+        kv_pos = kv_pos[:, None, :]                        # (B, 1, ck)
+        m = kv_pos <= positions[..., None]                 # (B, Sq, ck)
+        m &= kv_pos < kv_valid[:, None, None]
+        return m[:, None, None]                            # (B,1,1,Sq,ck)
+
+    if block_kv is None or block_kv >= L:
+        return _tile_partial(qg, k, v, mask_for(0, L),
+                             scale=scale, softcap=softcap)
+
+    if L % block_kv:
+        raise ValueError(f"block_kv={block_kv} must divide KV length {L}")
+    n_tiles = L // block_kv
+    kt = k.reshape(B, n_tiles, block_kv, NKV, H).transpose(1, 0, 2, 3, 4)
+    vt = v.reshape(B, n_tiles, block_kv, NKV, H).transpose(1, 0, 2, 3, 4)
+    m0 = jnp.full((B, NKV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, NKV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, NKV, G, Sq, H), jnp.float32)
+    # tile counter rides the carry, data-tainted so XLA cannot hoist the
+    # mask out of the scan (same idiom as models.attention._flash_fwd_impl)
+    t0 = (qg[0, 0, 0, 0, 0] * 0.0).astype(jnp.int32)
+
+    def body(carry, tile):
+        m, l, acc, t = carry
+        kc, vc = tile
+        m_c, l_c, a_c = _tile_partial(
+            qg, kc, vc, mask_for(t * block_kv, block_kv),
+            scale=scale, softcap=softcap)
+        m_new = jnp.maximum(m, m_c)
+        corr = jnp.exp(m - m_new)
+        corr_c = jnp.exp(m_c - m_new)
+        l_new = l * corr + l_c * corr_c
+        a_new = acc * corr[..., None] + a_c * corr_c[..., None]
+        return (m_new, l_new, a_new, t + 1), None
+
+    (m, l, acc, _), _ = jax.lax.scan(body, (m0, l0, a0, t0), (kt, vt))
+    return m, l, acc
+
+
+def _finalize(m, l, acc, dtype):
+    """(B, NKV, G, Sq[, H]) partials -> normalized (B, Sq, NQ, H)."""
+    B, NKV, G, Sq, H = acc.shape
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.reshape(B, NKV * G, Sq, H).transpose(0, 2, 1, 3)
+    return out.astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "page_size", "softcap", "block_pages", "impl", "interpret",
+    "return_partials"))
+def paged_attention(q, k_pages, v_pages, page_idx, positions, kv_valid, *,
+                    page_size, softcap=0.0, block_pages=1, impl=None,
+                    interpret=None, return_partials=False):
+    """q: (B, Sq, NQ, H); k/v_pages: (P, page_size, NKV, H) pool;
+    page_idx: (B, pages_per_seq) int32; positions: (B, Sq) int32 (query
+    positions, contiguous per row); kv_valid: (B,) int32 ragged lengths.
+
+    Returns (B, Sq, NQ, H) in q.dtype, or fp32 partials
+    ``(m, l, acc)`` shaped (B, NQ, Sq) / (B, NQ, Sq) / (B, NQ, Sq, H)
+    when ``return_partials`` (feed to :func:`combine_partials`).
+    """
+    impl = resolve_impl(impl)
+    B, Sq, NQ, H = q.shape
+    NKV = k_pages.shape[2]
+    G = NQ // NKV
+    pps = page_idx.shape[1]
+    L = pps * page_size
+    bp = min(block_pages, pps)
+    if pps % bp:
+        bp = 1
+    if impl == "xla":
+        if k_pages.shape[0] != B * pps:
+            raise ValueError(
+                "impl='xla' is the identity-page-layout specialization: "
+                f"pool has {k_pages.shape[0]} pages, need exactly "
+                f"B*pages_per_seq={B * pps} laid out row-major "
+                "(the engine layout). Use impl='pallas' for arbitrary "
+                "page maps.")
+        k = k_pages.reshape(B, L, NKV, H)
+        v = v_pages.reshape(B, L, NKV, H)
+        m, l, acc = _xla_partials(q, k, v, positions, kv_valid,
+                                  softcap=softcap, block_kv=bp * page_size)
+    elif impl == "pallas":
+        qg = q.reshape(B, Sq, NKV, G, H).transpose(0, 2, 3, 1, 4)
+        qg = qg.reshape(B, NKV, G * Sq, H)
+        pos0 = positions[:, 0]
+        acc, m, l = K.paged_flash_decode(
+            qg, k_pages, v_pages, page_idx, pos0, kv_valid, sq=Sq,
+            softcap=softcap, block_pages=bp,
+            interpret=interpret_default(interpret))
+        acc = acc.reshape(B, NKV, G, Sq, H)
+        m = m.reshape(B, NKV, G, Sq)
+        l = l.reshape(B, NKV, G, Sq)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    if return_partials:
+        return (m.reshape(B, NQ, Sq), l.reshape(B, NQ, Sq),
+                acc.reshape(B, NQ, Sq, H))
+    return _finalize(m, l, acc, q.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_kv"))
+def decode_partials(q, k, v, positions, kv_valid, *, kv_offset=None,
+                    softcap=0.0, block_kv=None):
+    """Grouped-GQA flash-decode partials over a dense KV slice — the
+    per-shard half of the SP-KV combine (no head materialization).
+
+    q: (B, Sq, NQ, H); k/v: (B, S, NKV, H); positions: (B, Sq) absolute;
+    kv_valid: (B,) absolute; kv_offset: absolute position of k[:, 0]
+    (scalar or (B,), may be traced).  Returns fp32 (m, l, acc) shaped
+    (B, NQ, Sq) / (B, NQ, Sq) / (B, NQ, Sq, H).
+    """
+    B, Sq, NQ, H = q.shape
+    m, l, acc = _xla_partials(q, k, v, positions, kv_valid,
+                              softcap=softcap, block_kv=block_kv,
+                              kv_offset=kv_offset)
+    return (m.reshape(B, NQ, Sq), l.reshape(B, NQ, Sq),
+            acc.reshape(B, NQ, Sq, H))
+
+
+def combine_partials(parts, dtype=jnp.float32):
+    """Fold a list of (m, l, acc) partials (each (B, NQ, Sq)[,H]) into the
+    normalized output (B, Sq, NQ, H) — the order-insensitive
+    flash-decoding combine (associativity pinned by tests)."""
+    ms = jnp.stack([p[0] for p in parts])
+    ls = jnp.stack([p[1] for p in parts])
+    accs = jnp.stack([p[2] for p in parts])
+    m = jnp.max(ms, axis=0)
+    corr = jnp.exp(ms - m[None])
+    l = jnp.sum(ls * corr, axis=0)
+    acc = jnp.sum(accs * corr[..., None], axis=0)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B, NQ, Sq, H)
+    return out.transpose(0, 2, 1, 3).astype(dtype)

@@ -1,0 +1,54 @@
+"""Oracle: dense full-softmax attention over a gathered page pool (fp32).
+
+The reference *materializes* exactly what the fused kernel exists to
+avoid: it gathers every row's pages out of the pool into a dense
+(B, L, NKV, H) cache view, repeats KV heads up to the query heads, and
+runs a full masked softmax.  Slow and memory-hungry on purpose — the
+point is that its answer is unarguable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention(q, k_pages, v_pages, page_idx, positions, kv_valid_len,
+                    *, softcap: float = 0.0):
+    """q: (B, Sq, NQ, H); k_pages/v_pages: (P, page_size, NKV, H) pool;
+    page_idx: (B, pages_per_seq) int32 (any layout — rows gathered);
+    positions: (B, Sq) int32 query positions; kv_valid_len: (B,) int32.
+
+    Mask semantics (the serving ragged contract): KV token t of row b is
+    attended by query column c iff ``t <= positions[b, c]`` (causality)
+    and ``t < kv_valid_len[b]`` (ragged validity).  Rows with
+    ``kv_valid_len == 0`` return all-zero outputs, NaN-free.
+    """
+    B, Sq, NQ, H = q.shape
+    NKV = k_pages.shape[2]
+    G = NQ // NKV
+    # gather the pool into the dense per-row cache view
+    k = k_pages[page_idx].reshape(B, -1, NKV, H)           # (B, L, NKV, H)
+    v = v_pages[page_idx].reshape(B, -1, NKV, H)
+    L = k.shape[1]
+    k = jnp.repeat(k, G, axis=2).transpose(0, 2, 1, 3)     # (B, NQ, L, H)
+    v = jnp.repeat(v, G, axis=2).transpose(0, 2, 1, 3)
+    qT = q.transpose(0, 2, 1, 3).astype(jnp.float32)       # (B, NQ, Sq, H)
+    s = jnp.einsum("bnqh,bnkh->bnqk", qT, k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * (H ** -0.5)
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    kv_pos = jnp.arange(L)[None, None, None, :]
+    mask = kv_pos <= positions[:, None, :, None]
+    mask &= kv_pos < kv_valid_len[:, None, None, None]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    # masked slots zeroed explicitly: on fully-masked rows m == NEG_INF
+    # and exp(s - m) would be 1 everywhere; the serving contract is
+    # all-zero outputs for kv_valid_len == 0 rows (l == 0, clamped)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    l = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bnqk,bnkh->bnqh", p / l, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)       # (B, Sq, NQ, H)

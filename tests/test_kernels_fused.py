@@ -27,7 +27,7 @@ def test_flash_attention(causal, softcap, shape):
     v = jax.random.normal(ks[2], (B, S, NKV, H), jnp.float32)
     got = fa_ops.flash_attention(q, k, v, causal=causal, softcap=softcap,
                                  block_q=128, block_kv=128)
-    qT, kT, vT, _ = fa_ops._expand(q, k, v)
+    qT, kT, vT, _ = fa_ops._oracle_expand(q, k, v)
     want = fa_ref.attention(qT, kT, vT, causal=causal, softcap=softcap)
     want = want.reshape(B, NQ, S, H).transpose(0, 2, 1, 3)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
@@ -58,7 +58,7 @@ def test_flash_decode(valid_lens):
     v = jax.random.normal(ks[2], (B, S, NKV, H), jnp.float32)
     kv_valid = jnp.array(valid_lens, jnp.int32)
     got = fa_ops.flash_decode(q, k, v, kv_valid, block_kv=128)
-    qT, kT, vT, _ = fa_ops._expand(q, k, v)
+    qT, kT, vT, _ = fa_ops._oracle_expand(q, k, v)
     want = fa_ref.attention(qT, kT, vT, causal=False,
                             kv_valid=jnp.repeat(kv_valid, NQ))
     want = want.reshape(B, NQ, 1, H).transpose(0, 2, 1, 3)
