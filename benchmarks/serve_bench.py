@@ -60,6 +60,15 @@ exposes are skipped with a note (fake devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``); ``--sp-kv``
 uses (data x model) meshes and shards the KV sequence axis too.
 
+The **open-loop scenario** (``--open-loop``; its own
+``serve_bench_open_loop.json`` artifact) measures the *latency* side:
+the workload arrives as a Poisson process at three rates bracketing the
+calibrated closed-loop capacity (plus a fixed-trace replay contender),
+driven through ``repro.serve.OpenLoopFrontend``'s virtual clock.  Rows
+carry the schema-validated ``latency`` block — TTFT/TBT/E2E
+p50/p90/p99, queue depth over time, and goodput under a derived
+TTFT+TBT SLO — next to the usual throughput and roofline columns.
+
 The shared-prefix baseline engine builds with ``analyze=True``, so the
 Report meta's ``analysis`` block records the ``repro.analysis.trace``
 cost-model lint (hot gathers, counter-blind scans, donation, ...) for
@@ -84,7 +93,10 @@ from repro.models.decode_state import stub_context
 from repro.perf.measure import measure as perf_measure
 from repro.perf.measure import measure_group
 from repro.perf.report import roofline_fraction
-from repro.serve import ContinuousBatchingEngine, StaticBatchEngine
+from repro.serve import (SLO, ContinuousBatchingEngine, OpenLoopFrontend,
+                         StaticBatchEngine)
+from repro.serve.arrivals import (poisson_arrivals, synthetic_requests,
+                                  trace_arrivals, trace_payload)
 
 ARCH = "granite-3-2b"
 
@@ -132,6 +144,20 @@ PAGED_SCENARIO = dict(slots=4, prompt_band=(8, 33), gen_band=(2, 97),
                       n_req=24)
 PAGED_SCENARIO_SMOKE = dict(slots=2, prompt_band=(4, 9), gen_band=(3, 6),
                             n_req=6)
+
+# open-loop scenario (--open-loop; its own serve_bench_open_loop.json
+# artifact): the same workload arrives as a Poisson process at three
+# rates bracketing the closed-loop throughput knee (the drain capacity
+# in requests/s, calibrated first on the same engine), plus one
+# fixed-trace contender that replays the mid-rate arrivals through the
+# repro.serve.trace schema round trip.  All contenders run interleaved
+# through measure_group; each row carries the full ``latency`` block
+# (TTFT/TBT/E2E percentiles, queue depth, goodput under a derived SLO).
+OPEN_LOOP_SCENARIO = dict(slots=4, prompt_band=(8, 25), gen_band=(8, 25),
+                          n_req=16, rate_factors=(0.5, 1.0, 2.0))
+OPEN_LOOP_SCENARIO_SMOKE = dict(slots=2, prompt_band=(4, 9),
+                                gen_band=(3, 6), n_req=5,
+                                rate_factors=(0.5, 1.0, 2.0))
 
 
 def _workload(rng, n, p_band, g_band, vocab):
@@ -367,6 +393,110 @@ def _paged_rows(cfg, model, params, sc: Dict, family: str = "lm", *,
     return rows, meta
 
 
+def _open_loop_rows(cfg, model, params, sc: Dict, family: str = "lm"
+                    ) -> Tuple[List[Dict], Dict]:
+    """Open-loop latency sweep: the workload arrives as a Poisson
+    process at ``rate_factors`` x the calibrated closed-loop capacity,
+    plus a fixed-trace replay of the mid-rate arrivals, all as equal
+    interleaved contenders.  Wall timing is two-level by design: the
+    outer ``measure_group`` wall is the contender's whole pass (the
+    median the row reports), while TTFT/TBT/E2E come from the
+    frontend's internal virtual clock (per-step ``now()`` brackets).
+    The SLO every rate is judged against is derived post hoc from the
+    *lowest*-rate pass — 3x its p50 TTFT and TBT — so goodput
+    degradation across rates is measured against one fixed bar."""
+    page = 8
+    rng = np.random.default_rng(23)
+    reqs = synthetic_requests(sc["n_req"], sc["prompt_band"],
+                              sc["gen_band"], cfg.vocab_size, seed=23)
+    extra = stub_context(cfg, rng)
+    max_len = -(-(max(sc["prompt_band"]) + max(sc["gen_band"])) // page) * page
+    eng = ContinuousBatchingEngine(
+        model, params, n_slots=sc["slots"], max_len=max_len,
+        page_size=page, prefill_chunk=8)
+    front = OpenLoopFrontend(eng)            # measurement (wall) clock
+
+    def _closed_setup():
+        eng.reset()
+        for prompt, glen in reqs:
+            eng.submit(prompt, glen, extra=extra)
+
+    # calibrate the knee: closed-loop drain throughput in requests/s is
+    # the service capacity the arrival rates bracket (warmup compiles
+    # every step shape before any timed pass)
+    mcap = perf_measure(eng.run, reps=REPEATS, warmup=1, jit=False,
+                        setup=_closed_setup)
+    capacity_req_s = sc["n_req"] / mcap.median_s
+
+    factors = tuple(sc["rate_factors"])
+    names = [f"poisson_{f:g}x" for f in factors]
+    arrs = {name: poisson_arrivals(reqs, f * capacity_req_s, seed=29,
+                                   extra=extra)
+            for name, f in zip(names, factors)}
+    # fixed-trace contender: the mid-rate arrivals serialized to the
+    # repro.serve.trace schema and replayed — pins a reproducible
+    # workload and exercises the replay path end to end (per-request
+    # extra context rides alongside; the trace itself stays pure JSON)
+    mid = names[len(names) // 2]
+    arrs["trace_replay"] = trace_arrivals(trace_payload(arrs[mid]),
+                                          extra=extra)
+
+    def _pass(arr):
+        def setup():
+            eng.reset()
+        return (front.run, (arr,), setup)
+
+    ms = measure_group({name: _pass(arr) for name, arr in arrs.items()},
+                       reps=REPEATS, warmup=1, jit=False)
+
+    # one SLO for every contender, from the uncontended baseline
+    lowest = names[0]
+    lat0 = ms[lowest].result.summary()
+    slo = SLO(ttft_s=max(3 * lat0["ttft_s"]["p50"], 1e-9),
+              tbt_s=max(3 * lat0["tbt_s"]["p50"], 1e-9))
+
+    factor_of = dict(zip(names, factors))
+    factor_of["trace_replay"] = factors[len(names) // 2]
+    rows = []
+    for name in arrs:
+        m = ms[name]
+        res = m.result                   # last repeat's OpenLoopResult
+        lat = res.summary(slo=slo)
+        s = res.engine_summary
+        rows.append({
+            "family": family, "arch": cfg.arch_id, "mix": "open_loop",
+            "engine": "continuous",
+            "arrival": ("trace" if name == "trace_replay" else "poisson"),
+            "rate_req_s": factor_of[name] * capacity_req_s,
+            "rate_factor": factor_of[name],
+            "slots": sc["slots"], "requests": sc["n_req"],
+            "wall_s_median": m.median_s,
+            "wall_s_all": [round(w, 4) for w in m.all_s],
+            "generated_tokens": s["generated_tokens"],
+            "tok_per_s": (s["generated_tokens"] / m.median_s
+                          if m.median_s > 0 else 0.0),
+            # flattened convenience columns; the full surface is
+            # ``latency`` (schema-validated by repro.perf --validate)
+            "ttft_p50_s": lat["ttft_s"]["p50"],
+            "ttft_p99_s": lat["ttft_s"]["p99"],
+            "tbt_p99_s": lat["tbt_s"]["p99"],
+            "slo_attainment": lat["slo"]["attainment"],
+            "goodput_tok_s": lat["goodput_tok_s"],
+            "latency": lat,
+            "model_flops": s["model_flops"],
+            "model_bytes": s["model_bytes"],
+            "roofline_utilization": roofline_fraction(
+                s["model_flops"], s["model_bytes"], m.median_s)})
+    meta = {
+        "capacity_req_s": capacity_req_s,
+        "closed_loop_wall_s": mcap.median_s,
+        "clock": "wall",
+        "slo": {"ttft_s": slo.ttft_s, "tbt_s": slo.tbt_s,
+                "derived": f"3x p50 of the {lowest} pass"},
+    }
+    return rows, meta
+
+
 def _sharded_mesh(count: int, sp_kv: bool):
     if count == 1:
         return None                      # the strict single-device path
@@ -469,9 +599,50 @@ def run(measure: bool = True,
         prefix_only: bool = False,
         sharded: bool = False,
         sp_kv: bool = False,
-        retune: bool = False) -> List[Dict]:
+        retune: bool = False,
+        open_loop: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if open_loop:
+        # its own artifact (serve_bench_open_loop.json): latency rows
+        # carry the new schema-validated ``latency`` block, and the
+        # classic closed-loop serve_bench.json stays unchanged
+        sc = OPEN_LOOP_SCENARIO_SMOKE if smoke else OPEN_LOOP_SCENARIO
+        fams = families or ["lm"]
+        if "all" in fams:
+            fams = list(FAMILY_ARCHS)
+        unknown = sorted(set(fams) - set(FAMILY_ARCHS))
+        if unknown:
+            raise SystemExit(
+                f"unknown families {unknown}; choose from "
+                f"{sorted(FAMILY_ARCHS)} or 'all'")
+        per_family_meta: Dict[str, Dict] = {}
+        for fam in fams:
+            cfg = reduced_config(FAMILY_ARCHS[fam])
+            model = build_model(cfg)
+            params = model.init_params(jax.random.key(0))
+            r, ometa = _open_loop_rows(cfg, model, params, sc, fam)
+            rows += r
+            per_family_meta[fam] = ometa
+        common.save_result(
+            "serve_bench_open_loop", rows,
+            meta={"reduced": True, "repeats": REPEATS,
+                  "statistic": "median", "smoke": smoke, "families": fams,
+                  "open_loop": per_family_meta})
+        common.print_table(
+            "open-loop serving: Poisson rate sweep around the "
+            "closed-loop knee (continuous engine, median of "
+            "interleaved repeats)", rows,
+            ["family", "arrival", "rate_factor", "ttft_p50_s",
+             "ttft_p99_s", "tbt_p99_s", "slo_attainment",
+             "goodput_tok_s"],
+            widths={"family": 7, "arrival": 8, "rate_factor": 12,
+                    "slo_attainment": 15})
+        print("-> TTFT/TBT come from the frontend's virtual clock "
+              "(per-step now() brackets); the SLO every rate is judged "
+              "against is 3x the lowest rate's p50, so goodput shows "
+              "how latency degrades as arrivals pass the knee.")
+        return rows
     if sharded:
         # its own artifact: the classic serve_bench.json stays a pure
         # single-device report, and the CI smoke validates both
@@ -621,7 +792,12 @@ if __name__ == "__main__":
                     help="force re-measurement of the paged-kernel "
                          "block_pages sweep (ignore "
                          "benchmarks/results/autotune_cache.json)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="run only the open-loop latency scenario: "
+                         "Poisson rate sweep + trace replay (writes "
+                         "serve_bench_open_loop.json; REPRO_BENCH_SMOKE=1 "
+                         "for tiny shapes)")
     args = ap.parse_args()
     run(families=args.families.split(",") if args.families else None,
         prefix_only=args.prefix_only, sharded=args.sharded,
-        sp_kv=args.sp_kv, retune=args.retune)
+        sp_kv=args.sp_kv, retune=args.retune, open_loop=args.open_loop)

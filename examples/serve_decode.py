@@ -14,6 +14,11 @@ on CPU):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=2 \
       PYTHONPATH=src python examples/serve_decode.py --mesh 2 --slots 4
+
+Open-loop serving (requests *arrive* on a clock instead of queueing up
+front; prints each request's TTFT / worst TBT and the latency summary):
+
+  PYTHONPATH=src python examples/serve_decode.py --open-loop --rate 20
 """
 import argparse
 
@@ -48,6 +53,12 @@ def main():
     ap.add_argument("--sp-kv", action="store_true",
                     help="also shard the KV-cache sequence axis over "
                          "'model' (needs NxM mesh)")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="requests arrive as a Poisson process through "
+                         "the open-loop front end; prints per-request "
+                         "TTFT / TBT and the latency summary")
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="open-loop arrival rate (requests/s)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -72,6 +83,46 @@ def main():
     rng = np.random.default_rng(0)
     system_prompt = rng.integers(1, cfg.vocab_size, size=2 * args.page_size)
     shared_ctx = stub_context(cfg, rng)
+
+    if args.open_loop:
+        from repro.serve import SLO, OpenLoopFrontend, poisson_arrivals
+        items = []
+        for _ in range(args.requests):
+            plen = int(rng.integers(5, 30))
+            glen = int(rng.integers(6, 17))
+            items.append((np.concatenate(
+                [system_prompt,
+                 rng.integers(1, cfg.vocab_size, size=plen)]), glen))
+        arr = poisson_arrivals(items, args.rate, seed=1,
+                               temperature=args.temperature,
+                               extra=shared_ctx)
+        for a in arr:
+            print(f"arrival t={a.arrival_s * 1e3:7.1f}ms "
+                  f"prompt_len={len(a.prompt)} gen_len={a.max_new_tokens}")
+        res = OpenLoopFrontend(engine).run(arr)
+        print()
+        for ev in res.events:
+            ttft = f"{ev.ttft_s * 1e3:7.1f}ms" if ev.ttft_s else "   --  "
+            worst = (f"{ev.max_tbt_s * 1e3:6.2f}ms" if ev.max_tbt_s
+                     else "  --  ")
+            print(f"rid={ev.rid} arrived@{ev.arrival_s * 1e3:7.1f}ms "
+                  f"ttft={ttft} worst_tbt={worst} "
+                  f"tokens={ev.n_generated} ({ev.finish_reason})")
+        lat = res.summary()
+        slo = SLO(ttft_s=max(3 * lat["ttft_s"]["p50"], 1e-9),
+                  tbt_s=max(3 * lat["tbt_s"]["p50"], 1e-9))
+        lat = res.summary(slo=slo)
+        q = lat["queue_depth"]
+        print(f"\nopen-loop @ {args.rate}/s: "
+              f"ttft p50={lat['ttft_s']['p50'] * 1e3:.1f}ms "
+              f"p99={lat['ttft_s']['p99'] * 1e3:.1f}ms  "
+              f"tbt p99={lat['tbt_s']['p99'] * 1e3:.2f}ms  "
+              f"queue mean={q['mean']:.2f} max={q['max']}")
+        print(f"goodput under SLO(3x p50): "
+              f"{lat['goodput_tok_s']:.1f} tok/s "
+              f"(attainment {lat['slo']['attainment']:.2f})")
+        return
+
     for _ in range(args.requests):
         plen = int(rng.integers(5, 30))
         glen = int(rng.integers(6, 17))

@@ -50,7 +50,36 @@ PY
     # serve_bench_sharded.json artifact (validated with the rest)
     XLA_FLAGS="--xla_force_host_platform_device_count=2" \
         REPRO_BENCH_SMOKE=1 python -m benchmarks.serve_bench --sharded
+    # open-loop serve scenario at tiny shapes: Poisson rate sweep + a
+    # short trace replay through the open-loop frontend, written to its
+    # own serve_bench_open_loop.json artifact; rows carry the new
+    # schema-validated "latency" block (TTFT/TBT/E2E + goodput)
+    REPRO_BENCH_SMOKE=1 python -m benchmarks.serve_bench --open-loop
     python -m repro.perf --validate benchmarks/results
+    # the open-loop artifact must carry a complete latency surface per
+    # arrival rate (the --validate pass checks shape; this checks content)
+    python - <<'PY'
+import json
+rows = json.load(open("benchmarks/results/serve_bench_open_loop.json"))["rows"]
+assert rows, "open-loop artifact has no rows"
+arrivals = {r["arrival"] for r in rows}
+assert "poisson" in arrivals and "trace" in arrivals, (
+    f"expected poisson + trace contenders, got {sorted(arrivals)}")
+for r in rows:
+    lat = r["latency"]
+    assert lat["requests"] > 0, f"{r['arrival']}@{r['rate_factor']}x: no requests"
+    assert lat["completed"] == lat["requests"], (
+        f"{r['arrival']}@{r['rate_factor']}x: "
+        f"{lat['completed']}/{lat['requests']} completed")
+    for dist in ("ttft_s", "tbt_s", "e2e_s"):
+        assert lat[dist]["p50"] >= 0 and lat[dist]["p99"] >= lat[dist]["p50"], (
+            f"{r['arrival']}@{r['rate_factor']}x: bad {dist} percentiles")
+    assert lat["slo"]["attainment"] >= 0, "missing SLO block"
+print(f"[bench-smoke] open-loop rows ok: "
+      + ", ".join(f"{r['arrival']}@{r['rate_factor']:g}x "
+                  f"ttft_p50={r['ttft_p50_s'] * 1e3:.2f}ms "
+                  f"goodput={r['goodput_tok_s']:.0f}tok/s" for r in rows))
+PY
     # the serve artifact must carry the trace-lint verdict on the very
     # decode programs it timed (ContinuousBatchingEngine(analyze=True)),
     # and the paged-vs-xla contenders must land on the expected sides of

@@ -12,6 +12,18 @@ decode slot axis lays out over ("pod", "data"), tensor parallelism over
 "model", and ``--sp-kv`` additionally shards the KV-cache sequence axis
 (flash-decoding).  On a CPU host fake the devices with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+
+``--open-loop`` routes the workload through the open-loop front end
+(``repro.serve.OpenLoopFrontend``): requests *arrive* on a clock
+instead of being queued up front, and the run prints TTFT/TBT/E2E
+percentiles, queue depth, and goodput under a TTFT+TBT SLO.
+``--rate`` sets the arrival rate in requests/s (0 = closed-loop
+arrivals through the frontend), ``--arrival poisson|gamma|trace``
+picks the process (``--cv`` tunes gamma burstiness), ``--trace``
+replays a ``repro.serve.trace`` JSON workload file, ``--slo-ttft`` /
+``--slo-tbt`` set the SLO bounds, and
+``--chunk-policy stall_free --tbt-target`` makes the scheduler's
+prefill chunk a per-step decision tuned to the TBT target.
 """
 from __future__ import annotations
 
@@ -61,6 +73,38 @@ def main():
                     help="also shard the KV-cache sequence axis over "
                          "'model' (sequence-parallel flash-decoding); "
                          "needs a mesh with a model axis")
+    ap.add_argument("--open-loop", action="store_true",
+                    help="serve through the open-loop front end: "
+                         "requests arrive on a clock; prints TTFT/TBT/"
+                         "E2E percentiles and goodput under the SLO")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="open-loop arrival rate in requests/s "
+                         "(0 = all requests arrive at t=0)")
+    ap.add_argument("--arrival", default="poisson",
+                    choices=("poisson", "gamma", "trace"),
+                    help="open-loop arrival process (gamma: see --cv; "
+                         "trace: see --trace)")
+    ap.add_argument("--cv", type=float, default=2.0,
+                    help="gamma arrivals: inter-arrival coefficient of "
+                         "variation (>1 = burstier than Poisson)")
+    ap.add_argument("--trace", default=None,
+                    help="replay a repro.serve.trace JSON workload file "
+                         "(implies --arrival trace)")
+    ap.add_argument("--slo-ttft", type=float, default=None,
+                    help="SLO: max seconds to first token (default: "
+                         "3x the run's p50 TTFT)")
+    ap.add_argument("--slo-tbt", type=float, default=None,
+                    help="SLO: max seconds between tokens (default: "
+                         "3x the run's p50 TBT)")
+    ap.add_argument("--chunk-policy", default="fixed",
+                    choices=("fixed", "stall_free"),
+                    help="prefill chunking: fixed constant-width chunks "
+                         "or per-step stall-free widths tuned to "
+                         "--tbt-target")
+    ap.add_argument("--tbt-target", type=float, default=None,
+                    help="stall_free chunk policy: the decode "
+                         "time-between-tokens bound (seconds) chunks "
+                         "are sized against")
     args = ap.parse_args()
 
     cfg = (reduced_config(args.arch) if args.reduced
@@ -101,9 +145,13 @@ def main():
     if args.sp_kv and (mesh is None or "model" not in mesh.shape):
         raise SystemExit("--sp-kv needs --mesh with a model axis "
                          "(e.g. --mesh 2x2)")
+    if args.chunk_policy == "stall_free" and not args.tbt_target:
+        raise SystemExit("--chunk-policy stall_free needs --tbt-target "
+                         "(seconds between decode tokens)")
     engine = ContinuousBatchingEngine(
         model, params, n_slots=args.slots, max_len=max_len,
         page_size=page, prefill_chunk=args.prefill_chunk,
+        chunk_policy=args.chunk_policy, tbt_target_s=args.tbt_target,
         prefix_cache=args.prefix_cache, prefix_pool=args.prefix_pool,
         mesh=mesh, sp_kv=args.sp_kv)
     if args.prefix_cache and not engine.prefix_cache:
@@ -115,6 +163,69 @@ def main():
               f"shard(s), sp_kv={sm['sp_kv']}"
               + (f"; forced replication: {sm['forced_replication']}"
                  if sm["forced_replication"] else ""))
+    if args.open_loop:
+        from repro.serve import (SLO, OpenLoopFrontend,
+                                 closed_loop_arrivals, gamma_arrivals,
+                                 poisson_arrivals, trace_arrivals)
+        extra = stub_context(cfg, rng)
+        if args.trace or args.arrival == "trace":
+            if not args.trace:
+                raise SystemExit("--arrival trace needs --trace FILE")
+            arr = trace_arrivals(args.trace, vocab_size=cfg.vocab_size,
+                                 extra=extra)
+            label = f"trace {args.trace}"
+        else:
+            items = []
+            for _ in range(n_req):
+                plen = int(rng.integers(max(1, args.prompt_len // 2),
+                                        args.prompt_len + 1))
+                items.append((rng.integers(1, cfg.vocab_size, size=plen),
+                              args.gen_len))
+            if args.rate <= 0:
+                arr = closed_loop_arrivals(
+                    items, temperature=args.temperature, extra=extra)
+                label = "closed-loop (all at t=0)"
+            elif args.arrival == "gamma":
+                arr = gamma_arrivals(items, args.rate, cv=args.cv, seed=2,
+                                     temperature=args.temperature,
+                                     extra=extra)
+                label = f"gamma rate={args.rate}/s cv={args.cv}"
+            else:
+                arr = poisson_arrivals(items, args.rate, seed=2,
+                                       temperature=args.temperature,
+                                       extra=extra)
+                label = f"poisson rate={args.rate}/s"
+        res = OpenLoopFrontend(engine).run(arr)
+        lat = res.summary()
+        ttft = (args.slo_ttft if args.slo_ttft is not None
+                else 3 * lat["ttft_s"]["p50"])
+        tbt = (args.slo_tbt if args.slo_tbt is not None
+               else 3 * lat["tbt_s"]["p50"])
+        slo = SLO(ttft_s=ttft, tbt_s=tbt) if ttft > 0 and tbt > 0 else None
+        if slo is not None:
+            lat = res.summary(slo=slo)
+        print(f"[serve] open-loop {args.arch} ({cfg.family}) "
+              f"slots={args.slots} requests={lat['requests']} "
+              f"completed={lat['completed']}: {label}")
+        for key, name in (("ttft_s", "TTFT"), ("tbt_s", "TBT"),
+                          ("e2e_s", "E2E")):
+            d = lat[key]
+            print(f"[serve]   {name}: p50={d['p50'] * 1e3:.2f}ms "
+                  f"p90={d['p90'] * 1e3:.2f}ms "
+                  f"p99={d['p99'] * 1e3:.2f}ms (n={d['n']})")
+        q = lat["queue_depth"]
+        print(f"[serve]   queue depth: mean={q['mean']:.2f} "
+              f"max={q['max']}; makespan={lat['makespan_s'] * 1e3:.1f}ms")
+        if slo is not None:
+            print(f"[serve]   SLO(ttft<={slo.ttft_s * 1e3:.1f}ms, "
+                  f"tbt<={slo.tbt_s * 1e3:.1f}ms): "
+                  f"attainment={lat['slo']['attainment']:.2f} "
+                  f"goodput={lat['goodput_tok_s']:.1f} tok/s")
+        if args.chunk_policy == "stall_free":
+            print(f"[serve]   stall-free chunks: last width "
+                  f"{engine.sched.last_chunk_width} "
+                  f"(base {args.prefill_chunk})")
+        return
     for _ in range(n_req):
         plen = int(rng.integers(max(1, args.prompt_len // 2),
                                 args.prompt_len + 1))

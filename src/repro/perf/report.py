@@ -128,6 +128,42 @@ _REQUIRED = {
 }
 _HW_KEYS = ("name", "peak_flops_bf16", "hbm_bw")
 
+# open-loop serving rows (serve_bench --open-loop) carry a "latency"
+# block produced by repro.serve.slo.latency_summary; when present it
+# must be the full telemetry surface, not a partial dict
+_LATENCY_KEYS = ("requests", "completed", "goodput_tok_s", "makespan_s",
+                 "queue_depth")
+_LATENCY_DISTS = ("ttft_s", "tbt_s", "e2e_s", "queue_wait_s")
+_DIST_KEYS = ("p50", "p90", "p99", "mean", "max", "n")
+_SLO_KEYS = ("ttft_s", "tbt_s", "attainment", "good_requests")
+
+
+def _validate_latency(lat: Any, where: str, errors: List[str]) -> None:
+    if not isinstance(lat, dict):
+        errors.append(f"{where} is {type(lat).__name__}, expected object")
+        return
+    for key in _LATENCY_KEYS:
+        if key not in lat:
+            errors.append(f"{where} missing key {key!r}")
+    for dist in _LATENCY_DISTS:
+        blk = lat.get(dist)
+        if not isinstance(blk, dict):
+            errors.append(f"{where}[{dist!r}] missing or not an object")
+            continue
+        for key in _DIST_KEYS:
+            if not isinstance(blk.get(key), (int, float)):
+                errors.append(
+                    f"{where}[{dist!r}][{key!r}] missing or non-numeric")
+    slo = lat.get("slo")
+    if slo is not None:
+        if not isinstance(slo, dict):
+            errors.append(f"{where}['slo'] is not an object")
+        else:
+            for key in _SLO_KEYS:
+                if not isinstance(slo.get(key), (int, float)):
+                    errors.append(
+                        f"{where}['slo'][{key!r}] missing or non-numeric")
+
 
 def validate(payload: Any) -> List[str]:
     """Schema check; returns a list of error strings (empty = valid)."""
@@ -153,6 +189,9 @@ def validate(payload: Any) -> List[str]:
         if not isinstance(row, dict):
             errors.append(f"rows[{i}] is {type(row).__name__}, "
                           "expected object")
+        elif "latency" in row:
+            _validate_latency(row["latency"], f"rows[{i}]['latency']",
+                              errors)
     for ch, verdict in payload["reliability"].items():
         if not isinstance(verdict, bool):
             errors.append(f"reliability[{ch!r}] is not a bool")

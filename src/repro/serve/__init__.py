@@ -112,16 +112,64 @@ construction:
 A new family therefore gets sharded serving for free: correct spec
 tuples are the entire contract.
 
-It unblocks the remaining serve roadmap: async request intake can match
-prefixes at enqueue time (before a slot even frees), per-shard intake
-queues can feed the admission ranking, and batched multi-row prefill
-chunks can amortize the per-chunk dispatch.
+**Open-loop front end** (serve/frontend.py + serve/arrivals.py +
+serve/slo.py): the latency side of the measurement story.  The
+contract:
+
+  * *arrivals* — ``serve.arrivals`` generators emit seeded
+    ``ArrivalRequest`` lists (Poisson, gamma with a burstiness knob,
+    fixed-trace JSON replay under the ``repro.serve.trace`` schema, and
+    a closed-loop compatibility generator with every arrival at t=0);
+  * *intake* — ``OpenLoopFrontend`` runs a virtual-clock event loop:
+    requests are submitted the moment the clock passes their arrival
+    time (the scheduler hashes prefix keys at ``submit()``, so queued
+    requests admit at their matched offset — enqueue-time prefix
+    matching), ``engine.step()`` runs between arrivals, and the clock
+    advances either by measured step walls (``clock="wall"``,
+    timestamps exclusively via ``perf.measure.now()``) or by the
+    costmodel's per-step bound time (``clock="model"``, fully
+    deterministic — what the tests pin);
+  * *telemetry* — per-request :class:`~repro.serve.slo.RequestEvents`
+    (arrival, enqueue, first scheduled, every kept token, finish;
+    preemption-discarded tokens are truncated out) reduce through
+    ``slo.latency_summary`` to TTFT/TBT/E2E p50/p90/p99, queue depth
+    over time, and goodput under a TTFT+TBT :class:`~repro.serve.slo.SLO`
+    — the schema-validated ``latency`` Report block of
+    ``serve_bench --open-loop``;
+  * *stall-free chunking* — ``Scheduler(chunk_policy="stall_free",
+    tbt_target_s=...)`` (exposed through the engine constructor) makes
+    the prefill chunk a per-step decision: the width halves until the
+    predicted step wall — from an EWMA per-token estimate fed by
+    measured walls (or modeled times under the model clock) — fits the
+    TBT target, so riding prefills never stall in-flight decodes.
+    ``chunk_policy="fixed"`` (default) is the unchanged sarathi
+    constant-chunk composition.
+
+Closed-loop compatibility is structural: under
+``arrivals.closed_loop_arrivals`` the frontend submits everything
+before the first step, which is exactly ``engine.submit()``\\*N +
+``engine.run()`` (temp-0 token parity pinned by
+tests/test_serve_frontend.py).
+
+Remaining serve roadmap: per-shard intake queues feeding the admission
+ranking, batched multi-row prefill chunks amortizing per-chunk
+dispatch, and an HTTP/streaming layer over the frontend.
 
 ``StaticBatchEngine`` remains the run-to-completion baseline used by the
 per-family temperature-0 parity tests and benchmarks/serve_bench.py;
 ``serve/sampling.py`` holds the greedy/temperature sampling shared by
 both engines.
 """
+from repro.serve.arrivals import (  # noqa: F401
+    ArrivalRequest,
+    closed_loop_arrivals,
+    gamma_arrivals,
+    poisson_arrivals,
+    save_trace,
+    synthetic_requests,
+    trace_arrivals,
+    trace_payload,
+)
 from repro.serve.cache import (  # noqa: F401
     PagedKVCache,
     PageTable,
@@ -135,10 +183,21 @@ from repro.serve.engine import (  # noqa: F401
     make_prefill_step,
     make_serve_step,
 )
+from repro.serve.frontend import (  # noqa: F401
+    OpenLoopFrontend,
+    OpenLoopResult,
+)
 from repro.serve.sampling import sample_tokens  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
+    CHUNK_POLICIES,
     Request,
     RequestState,
     Scheduler,
     StepPlan,
+)
+from repro.serve.slo import (  # noqa: F401
+    SLO,
+    RequestEvents,
+    latency_summary,
+    queue_depth_stats,
 )

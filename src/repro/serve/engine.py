@@ -161,11 +161,19 @@ class EngineStats:
 
     def summary(self) -> Dict[str, float]:
         if not self.steps:
+            # an empty drain (e.g. an open-loop tail that completed zero
+            # requests) must still return the FULL key set — 0.0 rates,
+            # never a KeyError or a divide-by-zero downstream — plus a
+            # note so reports can surface why everything is zero
             return {"steps": 0, "generated_tokens": 0, "tok_per_s": 0.0,
+                    "step_ms_p50": 0.0, "step_ms_p95": 0.0,
+                    "mean_occupancy": 0.0, "mean_page_utilization": 0.0,
                     "model_flops": self.model_flops,
                     "model_bytes": self.model_bytes,
+                    "model_tflops_per_s": 0.0,
                     "prefix_hit_tokens": self.prefix_hit_tokens,
-                    "prefix_hit_rate": 0.0}
+                    "prefix_hit_rate": 0.0,
+                    "note": "zero steps executed"}
         walls = sorted(s.wall_s for s in self.steps)
         prefill_tokens = sum(s.n_prefill_tokens for s in self.steps)
         prompt_total = prefill_tokens + self.prefix_hit_tokens
@@ -249,6 +257,8 @@ class ContinuousBatchingEngine:
 
     def __init__(self, model: LM, params, *, n_slots: int, max_len: int,
                  page_size: int = 16, prefill_chunk: int = 8,
+                 chunk_policy: str = "fixed",
+                 tbt_target_s: Optional[float] = None,
                  page_budget: Optional[int] = None,
                  eos_id: Optional[int] = None, seed: int = 0,
                  prefix_cache: bool = False, prefix_pool: int = 8,
@@ -289,7 +299,13 @@ class ContinuousBatchingEngine:
             prefix_pool=prefix_pool if self.prefix_cache else 0,
             n_shards=self.n_shards)
         self.sched = Scheduler(self.kv, prefill_chunk=prefill_chunk,
-                               eos_id=eos_id)
+                               eos_id=eos_id, chunk_policy=chunk_policy,
+                               tbt_target_s=tbt_target_s)
+        # what feeds the stall-free chunk policy's per-token estimate:
+        # "wall" (default) notes each step's measured wall; the open-loop
+        # frontend switches this to "external" under its deterministic
+        # model clock and feeds modeled step times itself
+        self.step_feedback = "wall"
         self.cache = model.init_cache(n_slots, max_len)
         if mesh is not None:
             self.cache = jax.device_put(self.cache, self._cache_sharding)
@@ -371,6 +387,12 @@ class ContinuousBatchingEngine:
         self._cost = StepCostModel(model.cfg, max_len)
         self.stats = EngineStats()
         self._results: Dict[int, np.ndarray] = {}
+        # last executed step's composition, for the open-loop frontend's
+        # event records (set before commit so token counts are pre-commit;
+        # None when the last iteration had no plan)
+        self.last_plan: Optional[StepPlan] = None
+        self.last_sampled_rids: List[tuple] = []   # [(slot, rid)]
+        self.last_admitted_rids: List[int] = []    # rids first-scheduled
         # opt-in build-time trace lint: compile the decode/prefill step
         # fns ahead of the first request and run repro.analysis.trace's
         # rules (hot gathers, predication density, counter-blind scans,
@@ -596,7 +618,9 @@ class ContinuousBatchingEngine:
                                n_shards=self.n_shards)
         self.sched = Scheduler(self.kv,
                                prefill_chunk=self.sched.prefill_chunk,
-                               eos_id=self.sched.eos_id)
+                               eos_id=self.sched.eos_id,
+                               chunk_policy=self.sched.chunk_policy,
+                               tbt_target_s=self.sched.tbt_target_s)
         self.cache = self.model.init_cache(self.n_slots, self.max_len)
         if self.mesh is not None:
             self.cache = jax.device_put(self.cache, self._cache_sharding)
@@ -612,6 +636,9 @@ class ContinuousBatchingEngine:
         self._seen_discarded = 0
         self.stats = EngineStats()
         self._results = {}
+        self.last_plan = None
+        self.last_sampled_rids = []
+        self.last_admitted_rids = []
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                temperature: float = 0.0,
@@ -647,6 +674,9 @@ class ContinuousBatchingEngine:
         """Run one engine iteration; False when no work remains."""
         plan = self.sched.next_plan(self._step_idx)
         if plan is None:
+            self.last_plan = None
+            self.last_sampled_rids = []
+            self.last_admitted_rids = []
             return self.sched.has_work()
         t0 = now()
         for slot in np.nonzero(plan.reset_mask)[0]:
@@ -709,6 +739,19 @@ class ContinuousBatchingEngine:
                 np.float32(pf.temperature),
                 np.int32(self._slot_row[pf.slot]), np.int32(pf.out_idx),
                 step_idx, pf.temperature > 0)
+        # frontend event capture: which requests sampled a token this
+        # step and which were first scheduled (admitted into a reset
+        # slot), recorded pre-commit while the slot -> rid map is live.
+        # A slot admitted and then preempted while composing this same
+        # plan is in reset_mask but no longer active — skip it.
+        self.last_plan = plan
+        self.last_sampled_rids = [
+            (slot, self.sched.active[slot].rid)
+            for slot in plan.sample_slots if slot in self.sched.active]
+        self.last_admitted_rids = [
+            self.sched.active[int(s)].rid
+            for s in np.nonzero(plan.reset_mask)[0]
+            if int(s) in self.sched.active]
         # EOS detection is the only per-step host sync; count-based
         # finishing leaves the device queue free-running
         sampled = (np.asarray(self._prev_sampled)
@@ -725,6 +768,12 @@ class ContinuousBatchingEngine:
             self._pending_rows[req.rid] = int(self._slot_row[req.finish_slot])
             self._slot_row[req.finish_slot] = -1
         dt = now() - t0
+        if self.step_feedback == "wall":
+            # feed the stall-free chunk policy's per-token estimate; the
+            # frontend's model clock sets step_feedback="external" and
+            # notes its deterministic modeled times instead
+            self.sched.note_step_wall(
+                dt, plan.n_decode + plan.n_prefill_tokens)
         self.stats.steps.append(StepRecord(
             wall_s=dt, n_decode=plan.n_decode,
             n_prefill_tokens=plan.n_prefill_tokens,
@@ -774,6 +823,25 @@ class ContinuousBatchingEngine:
                     "(page budget too small for an in-flight request?)")
         self._flush_results()
         return dict(self._results)
+
+    def results(self) -> Dict[int, np.ndarray]:
+        """Flush and return every finished request's tokens so far
+        ({rid: np.ndarray}) without requiring a full drain — the
+        open-loop frontend's read path (requests keep arriving, so
+        ``run()``'s drain semantics never apply)."""
+        self._flush_results()
+        return dict(self._results)
+
+    def modeled_step_time(self, n_decode: int,
+                          n_prefill_tokens: int) -> float:
+        """Analytic seconds for one step of this composition: the
+        costmodel's FLOPs/bytes against the reference ceilings
+        (max(compute, memory) — the roofline bound time).  This is the
+        deterministic virtual clock the open-loop frontend advances by
+        under ``clock="model"``; it is a *model* number, never a wall."""
+        flops, bytes_ = self._cost.step_cost(n_decode, n_prefill_tokens)
+        hw = costmodel.TPU_V5E
+        return max(flops / hw.peak_flops_bf16, bytes_ / hw.hbm_bw)
 
     def requests(self) -> List[Request]:
         return list(self.sched.finished)

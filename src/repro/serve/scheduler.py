@@ -146,13 +146,38 @@ class StepPlan:
         return sum(int(p.n_valid[0]) for p in self.prefills)
 
 
+#: valid per-step prefill chunk policies (see ``Scheduler.chunk_policy``)
+CHUNK_POLICIES = ("fixed", "stall_free")
+
+
 class Scheduler:
     def __init__(self, kv: PagedKVCache, *, prefill_chunk: int = 8,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None,
+                 chunk_policy: str = "fixed",
+                 tbt_target_s: Optional[float] = None):
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if chunk_policy not in CHUNK_POLICIES:
+            raise ValueError(
+                f"chunk_policy {chunk_policy!r} not in {CHUNK_POLICIES}")
+        if chunk_policy == "stall_free" and (tbt_target_s is None
+                                             or tbt_target_s <= 0):
+            raise ValueError(
+                "chunk_policy='stall_free' needs a positive tbt_target_s "
+                "(the decode time-between-tokens bound to tune chunks to)")
         self.kv = kv
         self.prefill_chunk = prefill_chunk
+        # prefill chunking policy: "fixed" always composes
+        # ``prefill_chunk``-token chunks; "stall_free" makes the chunk a
+        # per-step decision — sized so the predicted step wall (from the
+        # per-token time estimate the engine feeds via note_step_wall)
+        # stays under ``tbt_target_s``, so in-flight decodes never see a
+        # between-token stall from a riding prefill (sarathi's insight
+        # as a measurable knob instead of a constant)
+        self.chunk_policy = chunk_policy
+        self.tbt_target_s = tbt_target_s
+        self._sec_per_token: Optional[float] = None
+        self.last_chunk_width = prefill_chunk
         self.eos_id = eos_id
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}       # slot -> request
@@ -170,22 +195,43 @@ class Scheduler:
         self._fresh_slots: Set[int] = set()
 
     # -- intake ---------------------------------------------------------
+    @property
+    def next_rid(self) -> int:
+        """Rid the next submitted request will get (for error naming)."""
+        return self._next_rid
+
     def submit(self, prompt: Sequence[int], max_new_tokens: int, *,
                temperature: float = 0.0, step: int = 0,
                extra: Optional[Dict[str, Any]] = None) -> Request:
+        # validate AT SUBMIT, naming the request: a malformed request
+        # that only explodes steps later inside plan composition is
+        # undebuggable once dozens of requests are in flight
+        rid = self._next_rid
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if prompt.shape[0] == 0:
-            raise ValueError("empty prompt")
+            raise ValueError(f"request rid={rid}: empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError(
+                f"request rid={rid}: max_new_tokens must be >= 1, "
+                f"got {max_new_tokens}")
         if prompt.shape[0] + max_new_tokens > self.kv.max_len:
             raise ValueError(
-                f"prompt ({prompt.shape[0]}) + max_new_tokens "
-                f"({max_new_tokens}) exceeds max_len {self.kv.max_len}")
-        req = Request(rid=self._next_rid, prompt=prompt,
+                f"request rid={rid}: prompt ({prompt.shape[0]}) + "
+                f"max_new_tokens ({max_new_tokens}) exceeds max_len "
+                f"{self.kv.max_len}")
+        req = Request(rid=rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       temperature=temperature, extra=extra,
                       submit_step=step,
                       ctx_key=(context_key(extra)
                                if self.kv.prefix_pool else None))
+        if self.kv.prefix_pool:
+            # enqueue-time prefix keys: computed once here, so the pool
+            # is consultable the moment the request is queued (the
+            # open-loop frontend admits at the matched offset the
+            # instant a slot frees, without a per-attempt hash pass)
+            req.prefix_keys = self.kv.prefix_keys(req.prompt,
+                                                  ctx_key=req.ctx_key)
         self._next_rid += 1
         self.queue.append(req)
         return req
@@ -238,6 +284,8 @@ class Scheduler:
         while self.queue:
             req = self.queue[0]
             if req.prefix_keys is None and self.kv.prefix_pool:
+                # belt-and-braces: submit() computes these at enqueue
+                # time; only requests built by hand miss them
                 req.prefix_keys = self.kv.prefix_keys(req.prompt,
                                                       ctx_key=req.ctx_key)
             placed = self._place(req, donors_busy)
@@ -317,6 +365,42 @@ class Scheduler:
             return slot
         return None
 
+    # -- stall-free chunk sizing ----------------------------------------
+    def note_step_wall(self, wall_s: float, n_tokens: int) -> None:
+        """Feed one executed step's wall (or modeled time) and its token
+        count into the per-token time estimate the stall-free chunk
+        policy sizes against (EWMA; the engine calls this after every
+        step, or the open-loop frontend under its deterministic model
+        clock)."""
+        if n_tokens <= 0 or wall_s <= 0:
+            return
+        spt = wall_s / n_tokens
+        self._sec_per_token = (spt if self._sec_per_token is None
+                               else 0.8 * self._sec_per_token + 0.2 * spt)
+
+    @property
+    def sec_per_token(self) -> Optional[float]:
+        return self._sec_per_token
+
+    def _step_chunk(self, n_decode: int, n_prefilling: int) -> int:
+        """This step's prefill chunk width.  ``fixed`` always returns
+        ``prefill_chunk``; ``stall_free`` converts the TBT target into a
+        per-step token budget (target / est-seconds-per-token), charges
+        the in-flight decodes first, splits the rest across the
+        prefilling slots, and snaps the width down by halving so the
+        compiled prefill shapes stay a tiny power-of-two set.  Never
+        returns 0 — prefill always progresses (stall-free, not
+        prefill-starving)."""
+        if (self.chunk_policy != "stall_free" or not n_prefilling
+                or not self._sec_per_token):
+            return self.prefill_chunk
+        afford = int(self.tbt_target_s / self._sec_per_token) - n_decode
+        budget = max(1, afford // n_prefilling)
+        w = self.prefill_chunk
+        while w > 1 and w > budget:
+            w //= 2
+        return w
+
     def next_plan(self, step: int) -> Optional[StepPlan]:
         """Compose the next mixed step, or None when nothing is runnable."""
         reset_slots = set(self._admit(step))
@@ -342,11 +426,18 @@ class Scheduler:
             # else: the request waits this step, slot stays allocated
 
         # prefill chunks: EVERY prefilling slot advances by up to
-        # ``prefill_chunk`` tokens this step.  Each chunk runs as its own
+        # ``width`` tokens this step.  Each chunk runs as its own
         # single-row forward against the slot's extracted cache row, so a
         # prefill costs its own tokens only — decode rows never pay for a
         # riding chunk's width (the sarathi mixed step, decomposed).
-        width = self.prefill_chunk
+        # Under chunk_policy="stall_free" the width is a per-step decision
+        # sized so this step's predicted wall stays under tbt_target_s.
+        n_prefilling = sum(
+            1 for s in self._admission_order
+            if (r := self.active.get(s)) is not None
+            and r.state is RequestState.PREFILLING)
+        width = self._step_chunk(len(decode_slots), n_prefilling)
+        self.last_chunk_width = width
         prefills: List[PrefillChunk] = []
         for slot in list(self._admission_order):
             req = self.active.get(slot)

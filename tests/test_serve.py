@@ -10,6 +10,7 @@ from repro.configs import reduced_config
 from repro.models import build_model
 from repro.serve import (
     ContinuousBatchingEngine,
+    EngineStats,
     PagedKVCache,
     PageTable,
     RequestState,
@@ -409,3 +410,35 @@ def test_engine_requires_context_extra_at_submit():
     batched = np.zeros((2, cfg.n_audio_ctx, cfg.d_model), np.float32)
     with pytest.raises(ValueError, match="per-request"):
         eng.submit(np.arange(1, 9), 4, extra={"audio_frames": batched})
+
+
+def test_submit_validates_and_names_the_request():
+    # malformed requests must explode at submit, naming the rid they
+    # would have gotten — not steps later inside plan composition
+    sched = Scheduler(PagedKVCache(2, 32, 8))
+    with pytest.raises(ValueError, match=r"rid=0.*empty prompt"):
+        sched.submit(np.array([], np.int64), 3)
+    with pytest.raises(ValueError, match=r"rid=0.*max_new_tokens"):
+        sched.submit(np.arange(1, 5), 0)
+    with pytest.raises(ValueError, match=r"rid=0.*max_len"):
+        sched.submit(np.arange(1, 30), 8)
+    # a failed submit consumes no rid and queues nothing
+    assert sched.next_rid == 0 and not sched.queue
+    req = sched.submit(np.arange(1, 5), 2)
+    assert req.rid == 0
+    with pytest.raises(ValueError, match=r"rid=1.*must be >= 1"):
+        sched.submit(np.arange(1, 5), -1)
+
+
+def test_engine_stats_summary_zero_steps_is_total():
+    # a zero-drain summary (engine built, nothing ran) must carry the
+    # full key set with zeros — consumers index step_ms_p50 etc.
+    # unconditionally and must never divide by an empty step list
+    s = EngineStats().summary()
+    for key in ("steps", "generated_tokens", "tok_per_s", "step_ms_p50",
+                "step_ms_p95", "mean_occupancy", "mean_page_utilization",
+                "model_flops", "model_bytes", "model_tflops_per_s",
+                "prefix_hit_tokens", "prefix_hit_rate"):
+        assert s[key] == 0
+        assert not np.isnan(s[key])
+    assert s["note"] == "zero steps executed"
