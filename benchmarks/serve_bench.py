@@ -594,6 +594,28 @@ def _mix_rows(cfg, model, params, mixes, family: str) -> List[Dict]:
     return rows
 
 
+def _fingerprint_digest(analysis: Optional[Dict]) -> Optional[Dict]:
+    """Compact per-program digest of the compile-drift fingerprints the
+    analysis block carries (``meta["fingerprints"]``): just the
+    drift-relevant axes — gathers, donation aliasing, counter verdict,
+    firing rules — so a reader (or the --bench-smoke gate) can spot a
+    regression without unpacking the full op histograms."""
+    if not analysis or not analysis.get("programs"):
+        return None
+    out: Dict[str, Dict] = {}
+    for label, prog in analysis["programs"].items():
+        fp = prog.get("fingerprint") or {}
+        out[label] = {
+            "version": fp.get("version"),
+            "gather_ops": fp.get("gather_ops"),
+            "alias_pairs": fp.get("alias_pairs"),
+            "donated": fp.get("donated"),
+            "counters_verdict": (fp.get("counters") or {}).get("verdict"),
+            "finding_rules": fp.get("finding_rules"),
+        }
+    return out
+
+
 def run(measure: bool = True,
         families: Optional[List[str]] = None,
         prefix_only: bool = False,
@@ -727,6 +749,7 @@ def run(measure: bool = True,
                              "statistic": "median", "smoke": smoke,
                              "families": families or ["lm"],
                              "analysis": analysis,
+                             "fingerprints": _fingerprint_digest(analysis),
                              "paged": paged_meta})
     classic = [r for r in rows
                if r["mix"] not in ("shared_prefix", "paged_vs_xla")]

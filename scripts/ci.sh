@@ -6,9 +6,9 @@
 # — runs in under 2 minutes; the full suite (incl. 10+ min model smoke
 # tests) stays on the nightly path:
 #
-#   scripts/ci.sh                 # lint + tier1
+#   scripts/ci.sh                 # lint + compile-drift diff + tier1
 #   scripts/ci.sh --lint          # invariant linter only (<30s, no jax)
-#   scripts/ci.sh --full          # entire suite
+#   scripts/ci.sh --full          # entire suite (incl. the diff gate)
 #   scripts/ci.sh --bench-smoke   # tiny-shape benchmark run + validate
 #                                 # every benchmarks/results/*.json
 #                                 # against the repro.perf.report schema
@@ -119,6 +119,30 @@ for name, got in sorted(per_engine.items()):
 print(f"[bench-smoke] paged-kernel split ok; autotune "
       f"block_pages={tune['block_pages']} ({tune['source']}, "
       f"key={tune['key']})")
+
+# compile-drift surface: every traced program in the artifact must carry
+# its canonical fingerprint (the same dict `python -m repro.analysis
+# --diff` gates on), the meta must surface the per-program digest, and
+# the committed paged-decode baseline must still pin a gather-free
+# program (the invariant the new-gather drift rule exists to hold)
+fps = meta["fingerprints"]
+assert fps and "decode_step" in fps and "prefill_row" in fps, (
+    f"fingerprint digest missing programs: {sorted(fps or {})}")
+for label, prog in analysis["programs"].items():
+    fp = prog["fingerprint"]
+    assert fp["version"] >= 1 and fp["counters"]["verdict"], (
+        f"{label}: incomplete fingerprint block")
+assert fps["decode_step"]["gather_ops"] == 0, (
+    f"paged decode_step fingerprint gathers: {fps['decode_step']}")
+base = json.load(
+    open("src/repro/analysis/baselines/serve.decode_step.paged.json"))
+assert base["gather_ops"] == 0, (
+    f"committed paged-decode baseline pins {base['gather_ops']} gather "
+    "op(s) — the baseline itself regressed; a clean --diff would no "
+    "longer catch a gather creeping back")
+print(f"[bench-smoke] fingerprints ok: "
+      + ", ".join(f"{k} gather={v['gather_ops']} alias={v['alias_pairs']}"
+                  for k, v in sorted(fps.items())))
 PY
     exit 0
 fi
@@ -126,7 +150,12 @@ fi
 if [[ "${1:-}" == "--full" ]]; then
     shift
     python -m repro.analysis --ci
+    # compile-drift gate: live fingerprints of the pinned serve/kernel
+    # programs vs src/repro/analysis/baselines/*.json (exit 2 = a pinned
+    # program has no baseline; run --update-baselines and commit it)
+    python -m repro.analysis --diff --ci
     exec python -m pytest -q "$@"
 fi
 python -m repro.analysis --ci
+python -m repro.analysis --diff --ci
 exec python -m pytest -q -m tier1 "$@"

@@ -1,10 +1,11 @@
-"""repro.analysis — the two-layer static-analysis subsystem.
+"""repro.analysis — the four-layer static-analysis subsystem.
 
 Layer 1, source lint (``repro.analysis.lint``): every ROADMAP standing
 invariant as a named, waivable AST rule — timing confinement,
-compat-shim bypasses, results-writer bypasses, donation hygiene.
-Stdlib-only (never imports jax), so ``python -m repro.analysis --ci``
-and the tier1 invariant test stay fast.
+compat-shim bypasses, results-writer bypasses, donation hygiene,
+interpret-mode leaks.  Stdlib-only (never imports jax), so
+``python -m repro.analysis --ci`` and the tier1 invariant test stay
+fast.
 
 Layer 2, trace lint (``repro.analysis.trace``): the paper's mispriced
 patterns checked on compiled programs — gather/strided access,
@@ -13,17 +14,34 @@ predication density, while-lowered scans that blind the counters
 programs, host callbacks, and missed donation.  Imported lazily here so
 ``import repro.analysis`` stays jax-free.
 
-Waivers: ``repro.analysis.findings`` (``load_waivers``/``apply_waivers``
-over the committed ``waivers.toml`` baseline — every entry carries a
-reason).  Serve integration: ``ContinuousBatchingEngine(analyze=True)``
-runs the trace rules over its compiled step fns at build time;
-serve_bench records the result in its Report meta.
+Layer 3, compile-drift gate (``repro.analysis.fingerprint`` +
+``repro.analysis.diff``): canonical fingerprints of the pinned programs
+(serve hot paths + kernel ops) diffed against the committed baselines in
+``src/repro/analysis/baselines/`` — ``python -m repro.analysis --diff``
+/ ``--update-baselines``.  ``diff`` is stdlib (comparison + baseline
+IO); ``fingerprint`` (collection) imports jax and is loaded lazily.
+
+Layer 4, serve shadow-state checker (``repro.analysis.schedcheck``):
+a pure-Python shadow state machine over the continuous engine's page
+tables and scheduler — refcount conservation, leak-free drain, slot/rid
+binding, prefix-pool claims, admission/preemption legality — enabled by
+``ContinuousBatchingEngine(check=True)`` and on across the tier1 serve
+tests.
+
+One vocabulary throughout: ``repro.analysis.findings`` (``Finding``,
+``load_waivers``/``apply_waivers`` over the committed ``waivers.toml``
+baseline — every entry carries a reason) and the rule catalog in
+``repro.analysis.registry`` (``--rules`` prints every layer).  Serve
+integration: ``ContinuousBatchingEngine(analyze=True)`` runs the trace
+rules (and fingerprints the programs) at build time; serve_bench
+records the result in its Report meta.
 """
 from repro.analysis.findings import (  # noqa: F401
     Finding,
     Waiver,
     apply_waivers,
     load_waivers,
+    stale_waivers,
 )
 from repro.analysis.lint import (  # noqa: F401
     SCAN_DIRS,
@@ -32,16 +50,27 @@ from repro.analysis.lint import (  # noqa: F401
     lint_source,
     lint_tree,
 )
+from repro.analysis.registry import (  # noqa: F401
+    DIFF_RULES,
+    LAYERS,
+    SCHED_RULES,
+    TRACE_RULES,
+    all_rules,
+)
 
 __all__ = [
-    "Finding", "Waiver", "apply_waivers", "load_waivers",
+    "Finding", "Waiver", "apply_waivers", "load_waivers", "stale_waivers",
     "SCAN_DIRS", "SOURCE_RULES", "lint_file", "lint_source", "lint_tree",
-    "trace",  # lazy: repro.analysis.trace (imports jax)
+    "TRACE_RULES", "DIFF_RULES", "SCHED_RULES", "LAYERS", "all_rules",
+    "diff",        # stdlib: fingerprint comparison + baseline IO
+    "schedcheck",  # stdlib: serve shadow-state checker
+    "trace",       # lazy: repro.analysis.trace (imports jax)
+    "fingerprint",  # lazy: repro.analysis.fingerprint (imports jax)
 ]
 
 
 def __getattr__(name):
-    if name == "trace":
-        import repro.analysis.trace as trace_mod
-        return trace_mod
+    if name in ("trace", "fingerprint", "diff", "schedcheck"):
+        import importlib
+        return importlib.import_module(f"repro.analysis.{name}")
     raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")

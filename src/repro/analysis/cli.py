@@ -1,6 +1,8 @@
-"""CLI for the invariant linter.
+"""CLI for the invariant linter and the compile-drift gate.
 
     PYTHONPATH=src python -m repro.analysis [--ci] [paths...]
+    PYTHONPATH=src python -m repro.analysis --diff
+    PYTHONPATH=src python -m repro.analysis --update-baselines
 
 Reporting/exit contract (shared with ``python -m repro.perf
 --validate``): offending files print as a ``FAIL <path>`` line with one
@@ -12,9 +14,18 @@ codes: 0 = clean (waived findings allowed), 1 = unwaived findings,
 ``--ci`` is the gate mode (``scripts/ci.sh --lint`` and the default
 tier1 path): identical scanning, but waived findings are not listed
 individually — only counted — keeping gate output about what must be
-fixed.  This command never imports jax; the trace layer runs through
-``ContinuousBatchingEngine(analyze=True)`` / tests instead, so the gate
-stays inside its <30s budget.
+fixed.  A waiver that matched nothing in a full scan prints as a stale
+warning in both modes (``--prune-waivers`` lists just those entries) so
+the baseline cannot rot silently.  The source-lint path never imports
+jax, keeping the gate inside its <30s budget.
+
+``--diff`` is the compile-drift gate: collect the pinned programs' live
+fingerprints (``repro.analysis.fingerprint``; this path DOES import
+jax), diff them against the committed baselines in
+``src/repro/analysis/baselines/``, and report typed drift findings on
+``<diff:<target>>`` pseudo-paths under the same contract — except an
+unwaived ``missing-baseline`` exits 2 (the gate cannot judge drift
+without a baseline; run ``--update-baselines`` and commit the JSON).
 """
 from __future__ import annotations
 
@@ -23,20 +34,70 @@ import pathlib
 import sys
 from typing import List, Optional
 
-from repro.analysis import lint
+from repro.analysis import lint, registry
 from repro.analysis.findings import (
     DEFAULT_WAIVERS,
     apply_waivers,
     group_by_path,
     load_waivers,
+    stale_waivers,
 )
+
+
+def _print_findings(unwaived, waived, ci: bool) -> None:
+    for path, fs in sorted(group_by_path(unwaived).items()):
+        print(f"FAIL {path}")
+        for f in fs:
+            print(f"  - L{f.line} [{f.severity}] {f.rule}: {f.message}")
+    if waived and not ci:
+        for path, _ in sorted(group_by_path(
+                [f for f, _ in waived]).items()):
+            print(f"waived {path}")
+            for f, w in [(f, w) for f, w in waived if f.path == path]:
+                print(f"  - L{f.line} {f.rule} (waived: {w.reason})")
+
+
+def _print_stale(stale) -> None:
+    for w in stale:
+        print(f"stale waiver [warning]: rule={w.rule} path={w.path} "
+              "matched 0 findings — remove it from waivers.toml "
+              "(--prune-waivers lists all removable entries)")
+
+
+def _run_diff(args) -> int:
+    from repro.analysis import diff
+
+    try:
+        waivers = load_waivers(
+            pathlib.Path(args.waivers) if args.waivers else None)
+    except ValueError as e:
+        print(f"bad waiver file: {e}", file=sys.stderr)
+        return 2
+    live = diff.collect_fingerprints()
+    if not live:
+        print("nothing to diff: no pinned programs collected",
+              file=sys.stderr)
+        return 2
+    baselines = diff.load_baselines()
+    findings = diff.diff_all(live, baselines)
+    unwaived, waived = apply_waivers(findings, waivers)
+    _print_findings(unwaived, waived, args.ci)
+    _print_stale(stale_waivers(findings, waivers,
+                               rules=tuple(registry.DIFF_RULES)))
+    bad = len(group_by_path(unwaived))
+    print(f"{len(live) - bad}/{len(live)} programs clean; "
+          f"{len(unwaived)} finding(s) ({len(waived)} waived)")
+    if any(f.rule == "missing-baseline" for f in unwaived):
+        return 2
+    return 1 if unwaived else 0
 
 
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="invariant linter: ROADMAP standing invariants as "
-                    "named, waivable AST rules (see repro.analysis.lint)")
+        description="invariant linter + compile-drift gate: ROADMAP "
+                    "standing invariants as named, waivable rules "
+                    "(see repro.analysis.lint / .diff / .schedcheck)")
     ap.add_argument("paths", nargs="*",
                     help="files/dirs to lint (default: "
                          f"{'/'.join(lint.SCAN_DIRS)} under --root)")
@@ -49,13 +110,35 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--waivers", default=None, metavar="FILE",
                     help=f"waiver baseline (default: {DEFAULT_WAIVERS})")
     ap.add_argument("--rules", action="store_true",
-                    help="print the rule registry and exit")
+                    help="print the full rule registry (every layer) "
+                         "and exit")
+    ap.add_argument("--diff", action="store_true",
+                    help="compile-drift gate: live program fingerprints "
+                         "vs src/repro/analysis/baselines/ (imports jax)")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="re-collect every pinned program's fingerprint "
+                         "and rewrite the baseline JSONs (commit them)")
+    ap.add_argument("--prune-waivers", action="store_true",
+                    help="full scan, then list waiver entries that "
+                         "matched nothing (safe to delete)")
     args = ap.parse_args(argv)
 
     if args.rules:
-        for r in sorted(lint.SOURCE_RULES.values(), key=lambda r: r.rule):
-            print(f"{r.rule:24s} [{r.severity}] {r.description}")
+        for layer, rule in registry.all_rules():
+            print(f"{layer:10s} {rule.rule:24s} [{rule.severity}] "
+                  f"{rule.description}")
         return 0
+
+    if args.update_baselines:
+        from repro.analysis import diff
+        paths = diff.save_baselines(diff.collect_fingerprints())
+        for p in paths:
+            print(f"wrote {p}")
+        print(f"{len(paths)} baseline(s) updated")
+        return 0
+
+    if args.diff:
+        return _run_diff(args)
 
     root = pathlib.Path(args.root).resolve()
     if args.paths:
@@ -94,16 +177,31 @@ def main(argv: Optional[List[str]] = None) -> int:
             f.read_text(encoding="utf-8"), rel.as_posix()))
     unwaived, waived = apply_waivers(findings, waivers)
 
-    for path, fs in sorted(group_by_path(unwaived).items()):
-        print(f"FAIL {path}")
-        for f in fs:
-            print(f"  - L{f.line} [{f.severity}] {f.rule}: {f.message}")
-    if waived and not args.ci:
-        for path, pairs in sorted(group_by_path(
-                [f for f, _ in waived]).items()):
-            print(f"waived {path}")
-            for f, w in [(f, w) for f, w in waived if f.path == path]:
-                print(f"  - L{f.line} {f.rule} (waived: {w.reason})")
+    # stale-waiver detection: only a FULL scan can judge a source-rule
+    # waiver stale (a subset scan legitimately misses its findings), and
+    # only source rules — trace/diff/schedcheck findings are produced by
+    # other entry points
+    full_scan = not args.paths
+    stale = (stale_waivers(findings, waivers,
+                           rules=tuple(lint.SOURCE_RULES))
+             if full_scan else [])
+    if args.prune_waivers:
+        if not full_scan:
+            print("--prune-waivers requires a full scan (no paths)",
+                  file=sys.stderr)
+            return 2
+        if stale:
+            print(f"{len(stale)} removable waiver(s):")
+            for w in stale:
+                print(f"  - rule={w.rule} path={w.path} "
+                      f"(reason was: {w.reason})")
+        else:
+            print("0 removable waivers: every entry still matches a "
+                  "finding")
+        return 0
+
+    _print_findings(unwaived, waived, args.ci)
+    _print_stale(stale)
 
     bad_files = len(group_by_path(unwaived))
     print(f"{len(files) - bad_files}/{len(files)} files clean; "

@@ -153,6 +153,22 @@ def apply_waivers(findings: Sequence[Finding], waivers: Sequence[Waiver]
     return unwaived, waived
 
 
+def stale_waivers(findings: Sequence[Finding], waivers: Sequence[Waiver],
+                  rules: Optional[Sequence[str]] = None) -> List[Waiver]:
+    """Waivers that matched zero findings in a full scan — baseline
+    entries whose exception no longer exists and should be removed
+    before the baseline rots.  ``rules`` restricts the check to waivers
+    for those rule ids (a source-only scan cannot judge a trace/diff
+    waiver stale — its findings were never produced)."""
+    out: List[Waiver] = []
+    for w in waivers:
+        if rules is not None and w.rule not in rules:
+            continue
+        if not any(w.matches(f) for f in findings):
+            out.append(w)
+    return out
+
+
 def group_by_path(findings: Sequence[Finding]) -> Dict[str, List[Finding]]:
     out: Dict[str, List[Finding]] = {}
     for f in findings:

@@ -39,6 +39,14 @@ Rules (ids are stable — waivers and tests key on them):
     the trace layer checks the compiled side — see ``missed-donation``
     in ``repro.analysis.trace``.)
 
+``interpret-mode-leak`` (error)
+    ``pl.pallas_call(..., interpret=True)`` — the literal constant,
+    alias-resolved through any import spelling, directly or through
+    ``functools.partial`` — anywhere outside ``tests/`` and the kernel
+    ``*/ref.py`` oracles.  Interpret mode on a hot path is a silent
+    ~100x: production call sites must thread a resolved flag
+    (``kernels.common.interpret_default``) so TPU runs compile.
+
 Run it: ``python -m repro.analysis`` (or ``scripts/ci.sh --lint``).
 This module is stdlib-only; importing it never imports jax.
 """
@@ -80,6 +88,9 @@ SOURCE_RULES: Dict[str, Rule] = {r.rule: r for r in (
          "raw json.dump in benchmarks/ instead of common.save_result"),
     Rule("donation-hygiene", "warning",
          "donated buffer read again after the donating call"),
+    Rule("interpret-mode-leak", "error",
+         "literal pallas_call(interpret=True) outside tests/ and "
+         "*/ref.py"),
     Rule("parse-error", "error", "file does not parse"),
 )}
 
@@ -117,13 +128,31 @@ def _collect_imports(tree: ast.AST) -> Tuple[Dict[str, str], Dict[str, str],
         if isinstance(node, ast.Import):
             for a in node.names:
                 root = a.name.split(".")[0]
-                local = a.asname or root
-                if root in ("time", "jax", "json"):
-                    mod_aliases[local] = root
+                if root in ("time", "jax", "json", "functools"):
+                    if a.asname:
+                        # `import jax.experimental.pallas as pl` binds the
+                        # FULL dotted path to the alias, so pl.pallas_call
+                        # resolves to jax.experimental.pallas.pallas_call
+                        mod_aliases[a.asname] = a.name
+                    else:
+                        mod_aliases[root] = root
                 if root == "timeit":
                     import_hits.append((node, "timing", f"import {a.name}"))
         elif isinstance(node, ast.ImportFrom):
             mod = node.module or ""
+            if mod in ("jax.experimental", "jax.experimental.pallas",
+                       "functools"):
+                for a in node.names:
+                    if mod == "jax.experimental" and a.name == "pallas":
+                        mod_aliases[a.asname or a.name] = \
+                            "jax.experimental.pallas"
+                    elif mod == "jax.experimental.pallas" \
+                            and a.name == "pallas_call":
+                        name_aliases[a.asname or a.name] = \
+                            "jax.experimental.pallas.pallas_call"
+                    elif mod == "functools" and a.name == "partial":
+                        name_aliases[a.asname or a.name] = \
+                            "functools.partial"
             if mod == "time":
                 for a in node.names:
                     if a.name in _TIME_BAD_ATTRS:
@@ -254,6 +283,17 @@ def lint_source(src: str, rel: str) -> List[Finding]:
     compat_ok = rel in _COMPAT_ALLOWED
     in_benchmarks = rel.startswith("benchmarks/")
     results_ok = (not in_benchmarks) or rel in _RESULTS_ALLOWED
+    # interpret-mode exemptions: tests may force the interpreter, and the
+    # kernel ref.py oracles are allowed to be slow and dense
+    interp_ok = (rel.startswith("tests/") or rel == "ref.py"
+                 or rel.endswith("/ref.py"))
+
+    def _is_pallas_call(expr: ast.AST) -> bool:
+        if isinstance(expr, ast.Name):
+            return (name_aliases.get(expr.id)
+                    == "jax.experimental.pallas.pallas_call")
+        return _dotted(expr, mod_aliases) \
+            == "jax.experimental.pallas.pallas_call"
 
     for node, kind, what in import_hits:
         if kind == "timing" and not timing_ok:
@@ -312,6 +352,22 @@ def lint_source(src: str, rel: str) -> List[Finding]:
                 f"raw {d or origin}() in benchmarks/ — every "
                 "benchmarks/results/ artifact must be a Report written "
                 "via benchmarks.common.save_result"))
+        if not interp_ok:
+            # literal interpret=True at a pallas_call site — directly or
+            # curried through functools.partial(pl.pallas_call, ...)
+            is_partial = ((d == "functools.partial"
+                           or origin == "functools.partial")
+                          and node.args and _is_pallas_call(node.args[0]))
+            if (_is_pallas_call(func) or is_partial) and any(
+                    kw.arg == "interpret"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True for kw in node.keywords):
+                findings.append(Finding(
+                    "interpret-mode-leak", "error", rel, node.lineno,
+                    "pallas_call(interpret=True) outside tests// ref.py "
+                    "— interpret mode on a production path is a silent "
+                    "~100x; thread a resolved flag through "
+                    "kernels.common.interpret_default instead"))
         # `from time import perf_counter as _pc; _pc()` — the import is
         # already flagged; flag the call too so waivers can't hide a use
         # behind an import-only waiver line

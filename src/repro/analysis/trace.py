@@ -63,24 +63,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis.findings import Finding
-from repro.analysis.lint import Rule
+# the rule metadata lives in the stdlib registry so the CLI's --rules
+# can list it without importing jax; this module implements them
+from repro.analysis.registry import TRACE_RULES  # noqa: F401  (re-export)
 from repro.core import hlo as hlo_lib
 from repro.core.compat import cost_dict
-
-TRACE_RULES: Dict[str, Rule] = {r.rule: r for r in (
-    Rule("hot-gather", "warning",
-         "gather/scatter access in the compiled module"),
-    Rule("predication-density", "warning",
-         "select density above threshold (predication-heavy lowering)"),
-    Rule("scan-counter-blindness", "error",
-         "while-lowered scan invalidates counter channels"),
-    Rule("f32-upcast", "warning",
-         "bf16/f16 program compiled to mostly-f32 instructions"),
-    Rule("host-callback", "error",
-         "host callback inside the compiled program"),
-    Rule("missed-donation", "error",
-         "donate_argnums requested but nothing aliased"),
-)}
 
 # `input_output_alias={ {1}: (2, {}, may-alias), ... }` on the module line
 _ALIAS_PAIR_RE = re.compile(r"\(\d+,\s*\{[^{}]*\},\s*(?:may|must)-alias\)")
@@ -279,22 +266,16 @@ def lint_trace(report: TraceReport, *,
 # ---------------------------------------------------------------------------
 # serve-engine integration (ContinuousBatchingEngine(analyze=True))
 # ---------------------------------------------------------------------------
-def analyze_serve_engine(engine, *, calibration=None) -> Dict[str, Any]:
-    """Trace-lint a ``ContinuousBatchingEngine``'s step programs.
+def serve_step_args(engine) -> Dict[str, Any]:
+    """ShapeDtypeStruct argument tuples for ``engine``'s step programs —
+    the exact shapes the scheduler emits, with no device work.
 
-    Lowers the engine's decode step and prefill row against the exact
-    shapes the scheduler emits (ShapeDtypeStructs — no device work
-    beyond compilation), runs every trace rule, and returns the
-    ``analysis_meta`` block: per-program findings + pattern summary plus
-    the Table-1 verdicts the rules were judged under.  The engine's
-    analytic StepCostModel backs its stats, so scan-lowered families
-    report ``scan-counter-blindness`` at info severity (the counters are
-    already forced to ``source="model"``).
+    Returns ``{"decode": args, "prefill": args, "paged": bool,
+    "ctx": context-factory}`` where ``ctx()`` is the sharding context the
+    programs must trace under (a nullcontext off-mesh).  Shared between
+    ``analyze_serve_engine`` and ``repro.analysis.fingerprint`` so the
+    fingerprinted programs are exactly the analyzed ones.
     """
-    from repro.perf import channels as perf_channels
-
-    cal = (calibration if calibration is not None
-           else perf_channels.default_calibration())
     model = engine.model
     n, L = engine.n_slots, engine.max_len
     chunk = engine.sched.prefill_chunk
@@ -325,20 +306,42 @@ def analyze_serve_engine(engine, *, calibration=None) -> Dict[str, Any]:
                     sds((1, chunk), i32), sds((1, chunk), i32),
                     sds((1,), i32), sds((), f32), sds((), i32),
                     sds((), i32), sds((), i32), False)
-
     if engine.mesh is not None:
         from repro.parallel import axes as paxes
         ctx = lambda: paxes.sharding_ctx(engine.mesh, engine.rules)  # noqa: E731
     else:
         ctx = contextlib.nullcontext
+    return {"decode": decode_args, "prefill": prefill_args,
+            "paged": paged, "ctx": ctx}
+
+
+def analyze_serve_engine(engine, *, calibration=None) -> Dict[str, Any]:
+    """Trace-lint a ``ContinuousBatchingEngine``'s step programs.
+
+    Lowers the engine's decode step and prefill row against the exact
+    shapes the scheduler emits (ShapeDtypeStructs — no device work
+    beyond compilation), runs every trace rule, and returns the
+    ``analysis_meta`` block: per-program findings + pattern summary plus
+    the Table-1 verdicts the rules were judged under.  The engine's
+    analytic StepCostModel backs its stats, so scan-lowered families
+    report ``scan-counter-blindness`` at info severity (the counters are
+    already forced to ``source="model"``).
+    """
+    from repro.analysis.fingerprint import fingerprint_report
+    from repro.perf import channels as perf_channels
+
+    cal = (calibration if calibration is not None
+           else perf_channels.default_calibration())
+    sa = serve_step_args(engine)
+    ctx, paged = sa["ctx"], sa["paged"]
 
     programs: Dict[str, Any] = {}
     n_findings = 0
     worst = None
     rank = {"info": 0, "warning": 1, "error": 2}
     for label, fn, args in (
-            ("decode_step", engine._make_decode_fn(), decode_args),
-            ("prefill_row", engine._make_prefill_fn(), prefill_args)):
+            ("decode_step", engine._make_decode_fn(), sa["decode"]),
+            ("prefill_row", engine._make_prefill_fn(), sa["prefill"])):
         with ctx():
             rep = trace_program(fn, *args, donate_argnums=(1, 2, 3),
                                 static_argnums=(12,), label=label)
@@ -349,6 +352,8 @@ def analyze_serve_engine(engine, *, calibration=None) -> Dict[str, Any]:
             if worst is None or rank[f.severity] > rank[worst]:
                 worst = f.severity
         programs[label] = {"findings": [f.row() for f in fs],
+                           "fingerprint": fingerprint_report(
+                               rep, verdicts=cal.verdicts, findings=fs),
                            **rep.summary()}
     return {"rules": sorted(TRACE_RULES),
             "verdicts": dict(cal.verdicts),

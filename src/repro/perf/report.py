@@ -137,6 +137,15 @@ _LATENCY_DISTS = ("ttft_s", "tbt_s", "e2e_s", "queue_wait_s")
 _DIST_KEYS = ("p50", "p90", "p99", "mean", "max", "n")
 _SLO_KEYS = ("ttft_s", "tbt_s", "attainment", "good_requests")
 
+# serve_bench meta carries the trace-lint analysis block per traced
+# engine (``engine.analysis_meta``); each program record must carry the
+# canonical compile-drift fingerprint (``repro.analysis.fingerprint``)
+# so the artifact pins program *shape* next to the measured numbers —
+# the same dict ``python -m repro.analysis --diff`` gates on
+_FINGERPRINT_KEYS = ("version", "label", "op_histogram", "total_ops",
+                     "gather_ops", "while_bodies", "input_dtypes",
+                     "donated", "alias_pairs", "counters", "finding_rules")
+
 
 def _validate_latency(lat: Any, where: str, errors: List[str]) -> None:
     if not isinstance(lat, dict):
@@ -163,6 +172,33 @@ def _validate_latency(lat: Any, where: str, errors: List[str]) -> None:
                 if not isinstance(slo.get(key), (int, float)):
                     errors.append(
                         f"{where}['slo'][{key!r}] missing or non-numeric")
+
+
+def _validate_analysis(block: Any, where: str, errors: List[str]) -> None:
+    """An analysis block's traced programs must each carry a complete
+    fingerprint dict (missing keys mean the artifact cannot back the
+    compile-drift gate)."""
+    if not isinstance(block, dict):
+        return
+    programs = block.get("programs")
+    if not isinstance(programs, dict):
+        return
+    for label, prog in programs.items():
+        loc = f"{where}['programs'][{label!r}]"
+        if not isinstance(prog, dict):
+            errors.append(f"{loc} is not an object")
+            continue
+        fp = prog.get("fingerprint")
+        if not isinstance(fp, dict):
+            errors.append(f"{loc} missing its 'fingerprint' block")
+            continue
+        for key in _FINGERPRINT_KEYS:
+            if key not in fp:
+                errors.append(f"{loc}['fingerprint'] missing key {key!r}")
+        cnt = fp.get("counters")
+        if not isinstance(cnt, dict) or "verdict" not in cnt:
+            errors.append(
+                f"{loc}['fingerprint']['counters'] missing 'verdict'")
 
 
 def validate(payload: Any) -> List[str]:
@@ -192,6 +228,13 @@ def validate(payload: Any) -> List[str]:
         elif "latency" in row:
             _validate_latency(row["latency"], f"rows[{i}]['latency']",
                               errors)
+    meta = payload["meta"]
+    _validate_analysis(meta.get("analysis"), "meta['analysis']", errors)
+    paged = meta.get("paged")
+    if isinstance(paged, dict) and isinstance(paged.get("engines"), dict):
+        for name, blk in paged["engines"].items():
+            _validate_analysis(
+                blk, f"meta['paged']['engines'][{name!r}]", errors)
     for ch, verdict in payload["reliability"].items():
         if not isinstance(verdict, bool):
             errors.append(f"reliability[{ch!r}] is not a bool")

@@ -151,6 +151,18 @@ before the first step, which is exactly ``engine.submit()``\\*N +
 ``engine.run()`` (temp-0 token parity pinned by
 tests/test_serve_frontend.py).
 
+**Shadow-state checking** (``ContinuousBatchingEngine(check=True)``):
+the engine attaches the ``repro.analysis.schedcheck`` shadow state
+machine to its page tables and scheduler — every alloc/incref/free,
+admission, and preemption replays through a pure-Python twin that
+validates refcount conservation, leak-free drains, slot/rid binding,
+prefix-pool claims, and admission/preemption legality *before* the
+real structure can raise (or silently corrupt).  Violations surface
+as ``Finding`` records on ``engine.check_findings``; ``step()`` runs a
+full conservation pass per step and ``run()`` a drain audit.  Cost is
+host-side dict bookkeeping only (no jax), so the tier1 serve tests
+run every engine with the checker on (tests/conftest.py).
+
 Remaining serve roadmap: per-shard intake queues feeding the admission
 ranking, batched multi-row prefill chunks amortizing per-chunk
 dispatch, and an HTTP/streaming layer over the frontend.

@@ -250,10 +250,26 @@ class ContinuousBatchingEngine:
 
     ``analyze=True`` compiles the decode/prefill step fns at build time
     and runs the ``repro.analysis.trace`` cost-model lint over them
-    (gathers on the hot path, counter-blind scans, f32 upcasts, missed
-    donation, ...); the findings land in ``analysis_meta`` and
-    serve_bench copies them into its Report meta.
+    (gathers on the hot path, predication density, counter-blind scans,
+    f32 upcasts, missed donation, ...); the findings land in
+    ``analysis_meta`` and serve_bench copies them into its Report meta.
+
+    ``check=True`` attaches the ``repro.analysis.schedcheck`` shadow
+    state machine to this engine's page tables and scheduler: every
+    alloc/incref/free/admission/preemption replays through a pure-Python
+    shadow first, and after every step (plus after a full ``run()``
+    drain) the global invariants — refcount conservation, leak-free
+    drain, slot/rid binding, prefix-pool claims — are re-derived from
+    scratch.  Violations become ``Finding``s on ``engine.checker``
+    (``engine.check_findings``); the tier1 serve tests run with it on
+    (tests/conftest.py flips the class default).  Defaults to the class
+    attribute ``_DEFAULT_CHECK`` (False) when ``None``.
     """
+
+    #: class-level default for ``check`` (tests/conftest.py monkeypatches
+    #: this to True so every tier1 serve engine is shadow-checked without
+    #: touching construction sites)
+    _DEFAULT_CHECK = False
 
     def __init__(self, model: LM, params, *, n_slots: int, max_len: int,
                  page_size: int = 16, prefill_chunk: int = 8,
@@ -264,7 +280,7 @@ class ContinuousBatchingEngine:
                  prefix_cache: bool = False, prefix_pool: int = 8,
                  mesh=None, rules=None, sp_kv: bool = False,
                  paged_kernel: Optional[bool] = None, retune: bool = False,
-                 analyze: bool = False):
+                 analyze: bool = False, check: Optional[bool] = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -301,6 +317,15 @@ class ContinuousBatchingEngine:
         self.sched = Scheduler(self.kv, prefill_chunk=prefill_chunk,
                                eos_id=eos_id, chunk_policy=chunk_policy,
                                tbt_target_s=tbt_target_s)
+        # shadow-state checker (repro.analysis.schedcheck): pure Python,
+        # no jax — wraps this (kv, sched) pair's transitions and re-derives
+        # the page/slot invariants after every step.  Imported lazily so
+        # check=False engines never touch the analysis subsystem.
+        self.check = bool(self._DEFAULT_CHECK if check is None else check)
+        self.checker = None
+        if self.check:
+            from repro.analysis.schedcheck import SchedChecker
+            self.checker = SchedChecker.attach(self.kv, self.sched)
         # what feeds the stall-free chunk policy's per-token estimate:
         # "wall" (default) notes each step's measured wall; the open-loop
         # frontend switches this to "external" under its deterministic
@@ -621,6 +646,9 @@ class ContinuousBatchingEngine:
                                eos_id=self.sched.eos_id,
                                chunk_policy=self.sched.chunk_policy,
                                tbt_target_s=self.sched.tbt_target_s)
+        if self.check:
+            from repro.analysis.schedcheck import SchedChecker
+            self.checker = SchedChecker.attach(self.kv, self.sched)
         self.cache = self.model.init_cache(self.n_slots, self.max_len)
         if self.mesh is not None:
             self.cache = jax.device_put(self.cache, self._cache_sharding)
@@ -787,6 +815,8 @@ class ContinuousBatchingEngine:
         self.stats.prefix_hit_tokens = self.sched.prefix_hit_tokens
         self.stats.wall_s += dt
         self._step_idx += 1
+        if self.checker is not None:
+            self.checker.check_step()
         return self.sched.has_work()
 
     def _flush_results(self) -> None:
@@ -822,6 +852,8 @@ class ContinuousBatchingEngine:
                     "scheduler stalled: work queued but no step can run "
                     "(page budget too small for an in-flight request?)")
         self._flush_results()
+        if self.checker is not None:
+            self.checker.check_drain()
         return dict(self._results)
 
     def results(self) -> Dict[int, np.ndarray]:
@@ -842,6 +874,11 @@ class ContinuousBatchingEngine:
         flops, bytes_ = self._cost.step_cost(n_decode, n_prefill_tokens)
         hw = costmodel.TPU_V5E
         return max(flops / hw.peak_flops_bf16, bytes_ / hw.hbm_bw)
+
+    @property
+    def check_findings(self) -> List[Any]:
+        """Shadow-checker findings so far ([] when ``check=False``)."""
+        return [] if self.checker is None else list(self.checker.findings)
 
     def requests(self) -> List[Request]:
         return list(self.sched.finished)

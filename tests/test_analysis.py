@@ -12,6 +12,7 @@ import json
 import pathlib
 import textwrap
 
+import numpy as np
 import pytest
 
 pytestmark = pytest.mark.tier1
@@ -140,9 +141,49 @@ def test_parse_error_rule():
     assert _rules("def broken(:\n", "src/repro/bad.py") == ["parse-error"]
 
 
+def test_interpret_mode_leak_direct_call():
+    rules = _rules("""
+        import jax.experimental.pallas as pl
+        out = pl.pallas_call(kernel, out_shape=shape, interpret=True)(x)
+    """, "src/repro/kernels/gemm/ops.py")
+    assert "interpret-mode-leak" in rules
+
+
+def test_interpret_mode_leak_from_import_and_partial():
+    fs = lint_source(textwrap.dedent("""
+        import functools
+        from jax.experimental.pallas import pallas_call
+        call = functools.partial(pallas_call, kernel, interpret=True)
+    """), "src/repro/bad.py")
+    assert [f.rule for f in fs].count("interpret-mode-leak") == 1
+
+
+def test_interpret_mode_allowed_in_tests_and_ref():
+    src = """
+        import jax.experimental.pallas as pl
+        out = pl.pallas_call(kernel, out_shape=s, interpret=True)(x)
+    """
+    assert "interpret-mode-leak" not in _rules(src, "tests/test_x.py")
+    assert "interpret-mode-leak" not in _rules(
+        src, "src/repro/kernels/gemm/ref.py")
+
+
+def test_interpret_flag_passthrough_is_clean():
+    # forwarding a variable (interpret=interpret) is the supported debug
+    # plumbing; only a literal True baked into the call site is a leak
+    rules = _rules("""
+        import jax.experimental.pallas as pl
+        def op(x, interpret=False):
+            return pl.pallas_call(kernel, out_shape=s,
+                                  interpret=interpret)(x)
+    """, "src/repro/kernels/gemm/ops.py")
+    assert "interpret-mode-leak" not in rules
+
+
 def test_every_source_rule_has_a_fixture_above():
     covered = {"timing-confinement", "compat-shim-bypass",
-               "results-writer-bypass", "donation-hygiene", "parse-error"}
+               "results-writer-bypass", "donation-hygiene",
+               "interpret-mode-leak", "parse-error"}
     assert covered == set(SOURCE_RULES)
 
 
@@ -186,6 +227,71 @@ def test_missing_explicit_waiver_file_errors(tmp_path):
 def test_committed_baseline_loads_and_every_entry_has_reason():
     for w in load_waivers():
         assert w.reason.strip()
+
+
+def test_stale_waiver_detection_scoped_to_scanned_rules():
+    from repro.analysis.findings import stale_waivers
+
+    f = Finding("timing-confinement", "error", "benchmarks/bad.py", 3, "m")
+    live = Waiver("timing-confinement", "benchmarks/bad.py", "why")
+    stale = Waiver("timing-confinement", "benchmarks/gone.py", "why")
+    other_layer = Waiver("new-gather", "<diff:serve.decode_step.paged>",
+                         "why")
+    out = stale_waivers([f], [live, stale, other_layer],
+                        rules=("timing-confinement",))
+    # only the in-scope waiver that matched nothing is stale; the
+    # diff-layer waiver is invisible to a source scan
+    assert out == [stale]
+    # unscoped, the never-produced diff finding makes that waiver stale
+    assert stale_waivers([f], [live, stale, other_layer]) == [stale,
+                                                              other_layer]
+
+
+def test_cli_stale_waiver_warning_and_prune(tmp_path, capsys):
+    from repro.analysis.cli import main as analysis_main
+
+    bench = tmp_path / "benchmarks"
+    bench.mkdir()
+    (bench / "bad.py").write_text("import time\nt0 = time.time()\n")
+    wv = tmp_path / "w.toml"
+    wv.write_text(
+        '[[waiver]]\nrule = "timing-confinement"\n'
+        'path = "benchmarks/bad.py"\nreason = "live"\n'
+        '[[waiver]]\nrule = "timing-confinement"\n'
+        'path = "benchmarks/gone.py"\nreason = "stale"\n')
+
+    # full scan: the live waiver suppresses, the stale one warns
+    rc = analysis_main(["--ci", "--root", str(tmp_path),
+                        "--waivers", str(wv)])
+    out = capsys.readouterr().out
+    assert rc == 0                     # stale warnings are exit-neutral
+    assert "stale waiver [warning]" in out and "benchmarks/gone.py" in out
+    assert "0 finding(s) (1 waived)" in out
+
+    # --prune-waivers lists exactly the removable entry
+    rc = analysis_main(["--prune-waivers", "--root", str(tmp_path),
+                        "--waivers", str(wv)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "1 removable waiver(s)" in out
+    assert "benchmarks/gone.py" in out and "reason was: stale" in out
+
+    # a subset scan cannot judge staleness: usage error
+    assert analysis_main(["--prune-waivers", "--root", str(tmp_path),
+                          "--waivers", str(wv),
+                          str(bench / "bad.py")]) == 2
+
+
+def test_cli_rules_lists_all_four_layers(capsys):
+    from repro.analysis.cli import main as analysis_main
+
+    assert analysis_main(["--rules"]) == 0
+    out = capsys.readouterr().out
+    layers = {line.split()[0] for line in out.strip().splitlines()}
+    assert layers == {"source", "trace", "diff", "schedcheck"}
+    for rule in ("interpret-mode-leak", "hot-gather", "new-gather",
+                 "missing-baseline", "double-free", "page-leak"):
+        assert rule in out
 
 
 # ---------------------------------------------------------------------------
@@ -404,3 +510,307 @@ def test_engine_analyze_meta():
     # analyze=False (default) engines never build the block
     eng2 = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32)
     assert eng2.analysis_meta is None
+    # every traced program carries its compile-drift fingerprint (the
+    # dict --diff gates on; serve_bench writes it into Report meta)
+    fp = decode["fingerprint"]
+    assert fp["version"] >= 1 and fp["gather_ops"] == 0
+    assert fp["counters"]["verdict"] in ("counter", "model-required")
+    assert fp["donated"] and fp["alias_pairs"] > 0
+
+
+# ---------------------------------------------------------------------------
+# layer 3: the compile-drift gate — one synthetic fixture per drift rule
+# ---------------------------------------------------------------------------
+def _fp(**over):
+    """A minimal canonical fingerprint; override fields per fixture."""
+    fp = {"version": 1, "label": "prog", "op_histogram": {"add": 1},
+          "instruction_classes": {"elementwise": 1}, "total_ops": 1,
+          "gather_ops": 0, "select_frac": 0.0, "while_bodies": 0,
+          "f32_instr_frac": 0.0, "input_dtypes": ["float32"],
+          "donated": True, "alias_pairs": 2,
+          "counters": {"flops": 100.0, "bytes": 200.0,
+                       "verdict": "counter", "flops_scan_verdict": True},
+          "finding_rules": [], "sharding": None}
+    fp.update(over)
+    return fp
+
+
+def _drift(base_over, live_over):
+    from repro.analysis.diff import diff_fingerprint
+    return diff_fingerprint("prog", _fp(**base_over), _fp(**live_over))
+
+
+def test_diff_identical_fingerprints_are_clean():
+    assert _drift({}, {}) == []
+
+
+def test_diff_new_gather():
+    fs = _drift({}, {"gather_ops": 3})
+    assert [(f.rule, f.severity) for f in fs] == [("new-gather", "error")]
+    assert fs[0].path == "<diff:prog>" and "3 gather" in fs[0].message
+    # fewer gathers than the baseline is an improvement, not drift
+    assert _drift({"gather_ops": 3}, {"gather_ops": 1}) == []
+
+
+def test_diff_flops_inflation_respects_tolerance():
+    clean = _drift({}, {"counters": {"flops": 104.0, "bytes": 200.0,
+                                     "verdict": "counter",
+                                     "flops_scan_verdict": True}})
+    assert clean == []                       # +4% is inside the 5% band
+    fs = _drift({}, {"counters": {"flops": 100.0, "bytes": 260.0,
+                                  "verdict": "counter",
+                                  "flops_scan_verdict": True}})
+    assert [(f.rule, f.severity) for f in fs] == [("flops-inflation",
+                                                   "warning")]
+    assert fs[0].context["channel"] == "bytes"
+
+
+def test_diff_lost_donation():
+    fs = _drift({}, {"alias_pairs": 0})
+    assert [(f.rule, f.severity) for f in fs] == [("lost-donation",
+                                                   "error")]
+    # a program that never donated cannot lose its aliasing
+    assert _drift({"donated": False, "alias_pairs": 0},
+                  {"donated": False, "alias_pairs": 0}) == []
+
+
+def test_diff_new_finding_class():
+    fs = _drift({"finding_rules": ["scan-counter-blindness"]},
+                {"finding_rules": ["hot-gather",
+                                   "scan-counter-blindness"]})
+    assert [f.rule for f in fs] == ["new-finding-class"]
+    assert fs[0].context["new_rules"] == ["hot-gather"]
+    # a rule *disappearing* is an improvement, not drift
+    assert _drift({"finding_rules": ["hot-gather"]},
+                  {"finding_rules": []}) == []
+
+
+def test_diff_layout_change():
+    fs = _drift({}, {"input_dtypes": ["bfloat16"]})
+    assert [f.rule for f in fs] == ["layout-change"]
+    fs = _drift({}, {"sharding": {"mesh": ["data"]}})
+    assert [f.rule for f in fs] == ["layout-change"]
+    assert "sharding" in fs[0].message
+
+
+def test_diff_all_missing_baseline_and_retired_targets():
+    from repro.analysis.diff import diff_all
+
+    live = {"prog.a": _fp(label="prog.a"), "prog.b": _fp(label="prog.b")}
+    fs = diff_all(live, {"prog.a": _fp(label="prog.a"),
+                         "prog.retired": _fp(label="prog.retired")})
+    # the uncovered live program errors; the retired baseline is ignored
+    assert [(f.rule, f.path) for f in fs] == [("missing-baseline",
+                                               "<diff:prog.b>")]
+
+
+def test_cli_diff_contract(tmp_path, capsys, monkeypatch):
+    from repro.analysis import diff
+    from repro.analysis.cli import main as analysis_main
+
+    fps = {"prog.a": _fp(label="prog.a"), "prog.b": _fp(label="prog.b")}
+    monkeypatch.setattr(diff, "collect_fingerprints",
+                        lambda targets=None: {k: dict(v)
+                                              for k, v in fps.items()})
+    bdir = tmp_path / "baselines"
+    diff.save_baselines(fps, str(bdir))
+    monkeypatch.setattr(diff, "BASELINE_DIR", str(bdir))
+    no_waivers = tmp_path / "w.toml"
+    no_waivers.write_text("")
+
+    # clean: live == committed baselines
+    rc = analysis_main(["--diff", "--waivers", str(no_waivers)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert out.strip().splitlines()[-1] == (
+        "2/2 programs clean; 0 finding(s) (0 waived)")
+
+    # injected drift: a gather creeps into prog.a
+    fps["prog.a"] = _fp(label="prog.a", gather_ops=2)
+    rc = analysis_main(["--diff", "--ci", "--waivers", str(no_waivers)])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL <diff:prog.a>" in out and "new-gather" in out
+    assert out.strip().splitlines()[-1] == (
+        "1/2 programs clean; 1 finding(s) (0 waived)")
+
+    # a waiver (with reason) turns the same drift back into exit 0
+    wv = tmp_path / "waive_gather.toml"
+    wv.write_text('[[waiver]]\nrule = "new-gather"\n'
+                  'path = "<diff:prog.a>"\nreason = "known, tracked"\n')
+    assert analysis_main(["--diff", "--ci", "--waivers", str(wv)]) == 0
+    capsys.readouterr()
+
+    # missing baseline: usage-class failure, exit 2
+    fps["prog.a"] = _fp(label="prog.a")
+    (bdir / "prog.b.json").unlink()
+    rc = analysis_main(["--diff", "--waivers", str(no_waivers)])
+    out = capsys.readouterr().out
+    assert rc == 2
+    assert "missing-baseline" in out and "--update-baselines" in out
+
+
+def test_committed_baselines_cover_every_pinned_target():
+    from repro.analysis import diff
+
+    committed = set(diff.load_baselines())
+    assert committed == set(diff.pinned_targets())
+    # the headline invariant the gate exists to hold: the paged decode
+    # baseline pins a gather-free, donation-aliased program
+    paged = diff.load_baselines()["serve.decode_step.paged"]
+    assert paged["gather_ops"] == 0 and paged["alias_pairs"] > 0
+    xla = diff.load_baselines()["serve.decode_step.xla"]
+    assert xla["gather_ops"] > 0       # the twin keeps the gather visible
+
+
+# ---------------------------------------------------------------------------
+# layer 4: the serve shadow-state checker
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_model():
+    import jax
+
+    from repro.configs import reduced_config
+    from repro.models import build_model
+
+    cfg = reduced_config("granite-3-2b")
+    model = build_model(cfg)
+    params = model.init_params(jax.random.key(0))
+    return cfg, model, params
+
+
+def _bare_pair(**kw):
+    from repro.serve import PagedKVCache, Scheduler
+    kv = PagedKVCache(n_slots=2, max_len=32, page_size=8, **kw)
+    return kv, Scheduler(kv, prefill_chunk=4)
+
+
+def test_schedcheck_double_free_event():
+    from repro.analysis.schedcheck import SchedChecker
+
+    kv, sched = _bare_pair()
+    chk = SchedChecker(kv, sched)
+    chk.on_alloc(0, [3, 4])
+    chk.on_free(0, [3, 4])
+    chk.on_free(0, [3])                # the corrupted transition
+    assert [f.rule for f in chk.error_findings] == ["double-free"]
+    assert "page 3" in chk.error_findings[0].message
+
+
+def test_schedcheck_prefix_claim_and_admission_legality_events():
+    from repro.analysis.schedcheck import SchedChecker
+
+    kv, sched = _bare_pair()
+    chk = SchedChecker(kv, sched)
+    chk.on_incref(0, [9])              # sharing a page nobody owns
+    chk.on_admit(0, 7, was_free=True, excluded=False)   # outside shard
+    chk.on_admit(0, 0, was_free=False, excluded=False)  # slot still live
+    chk.on_preempt(0, younger_than=1, shard=None, order=[0, 1])  # elder
+    rules = [f.rule for f in chk.findings]
+    assert rules == ["prefix-double-claim", "illegal-admission",
+                     "illegal-admission", "illegal-preemption"]
+
+
+def test_schedcheck_attach_catches_live_double_free():
+    # the acceptance case: a double free through the engine's own table
+    # is flagged by the checker *before* the cache raises
+    from repro.analysis.schedcheck import SchedChecker
+
+    kv, sched = _bare_pair()
+    chk = SchedChecker.attach(kv, sched)
+    s = kv.admit(first_chunk=8)
+    assert kv.grow(s, 8)
+    pages = list(kv.slots[s].pages)
+    kv.release(s)                      # frees the slot's pages
+    assert chk.findings == [] and chk.n_events >= 3
+    with pytest.raises(RuntimeError):
+        kv.table.free(pages)           # inject the double free
+    assert [f.rule for f in chk.error_findings] == ["double-free"]
+
+
+def test_schedcheck_detects_leaked_page_on_drain():
+    from repro.analysis.schedcheck import SchedChecker
+
+    kv, sched = _bare_pair()
+    chk = SchedChecker.attach(kv, sched)
+    kv.table.alloc(1)                  # a page no slot or entry owns
+    rules = {f.rule for f in chk.check_drain()}
+    assert "page-leak" in rules
+
+
+def test_schedcheck_detects_dual_rid_slot():
+    from repro.analysis.schedcheck import SchedChecker
+
+    kv, sched = _bare_pair()
+    chk = SchedChecker.attach(kv, sched)
+    sched.submit(np.arange(1, 5), max_new_tokens=2)
+    sched.submit(np.arange(1, 5), max_new_tokens=2)
+    plan = sched.next_plan(step=0)
+    sched.commit(plan, None, step=0)
+    assert chk.check_step() == []      # the real books are consistent
+    s0, s1 = sorted(sched.active)
+    sched.active[s1] = sched.active[s0]     # corrupt: one rid, two slots
+    rules = [f.rule for f in chk.check_step()]
+    assert "slot-double-bind" in rules
+
+
+def test_engine_shadow_checker_full_cycle(tiny_model):
+    # submit -> preempt -> prefix-hit -> drain on a live engine with
+    # check=True: the checker sees every transition and stays clean
+    from repro.serve.engine import ContinuousBatchingEngine
+
+    cfg, model, params = tiny_model
+    page = 8
+    eng = ContinuousBatchingEngine(model, params, n_slots=2, max_len=32,
+                                   page_size=page, page_budget=6,
+                                   prefill_chunk=8, prefix_cache=True,
+                                   check=True)
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, size=2 * page)
+    rids = []
+    for i in range(4):
+        tail = rng.integers(1, cfg.vocab_size, size=3 + i)
+        rids.append(eng.submit(np.concatenate([shared, tail]), 4))
+    out = eng.run()
+    assert all(len(out[r]) == 4 for r in rids)
+    assert eng.checker is not None and eng.checker.n_events > 0
+    assert eng.check_findings == []
+    # the cycle exercised prefix sharing (later requests hit the pooled
+    # shared prefix) — the checker validated those increfs
+    assert eng.stats.prefix_hit_tokens > 0
+    # reset rebuilds a fresh checker on the rebuilt books
+    eng.reset()
+    assert eng.checker is not None and eng.checker.n_events == 0
+    assert eng.check_findings == []
+
+
+def test_diff_catches_gather_reintroduced_into_paged_decode(monkeypatch,
+                                                            capsys):
+    # THE acceptance demo: force the paged decode's embed back onto the
+    # gather path (models/layers.py one_hot lever) and the drift gate
+    # must exit 1 with a new-gather finding naming the program
+    import repro.models.layers as layers
+    from repro.analysis import diff, fingerprint
+    from repro.analysis.cli import main as analysis_main
+
+    # the committed baseline is live-accurate first: the same collection
+    # diffs clean against it before the corruption
+    clean = fingerprint.collect_fingerprints(["serve.decode_step.paged"])
+    assert diff.diff_all(clean, diff.load_baselines()) == []
+
+    real_embed = layers.embed
+
+    def gather_embed(tokens, params, compute_dtype, *, one_hot=False):
+        return real_embed(tokens, params, compute_dtype, one_hot=False)
+
+    monkeypatch.setattr(layers, "embed", gather_embed)
+    live = fingerprint.collect_fingerprints(["serve.decode_step.paged"])
+    assert live["serve.decode_step.paged"]["gather_ops"] > 0
+
+    monkeypatch.setattr(diff, "collect_fingerprints",
+                        lambda targets=None: live)
+    rc = analysis_main(["--diff", "--ci"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "FAIL <diff:serve.decode_step.paged>" in out
+    assert "new-gather" in out
