@@ -159,6 +159,22 @@ OPEN_LOOP_SCENARIO_SMOKE = dict(slots=2, prompt_band=(4, 9),
                                 gen_band=(3, 6), n_req=5,
                                 rate_factors=(0.5, 1.0, 2.0))
 
+# speculative scenario (--speculative; its own serve_bench_speculative
+# artifact): the same workload through two continuous engines — n-gram
+# draft-verify speculation on vs off — as equal interleaved contenders,
+# on two prompt mixes: ``repetitive`` (every prompt tiles a short token
+# motif — the prompt-lookup drafter's best case, proposals fire from the
+# first decode step) and ``random`` (i.i.d. prompts — the drafter can
+# only lock onto the model's own greedy cycles mid-generation).  Rows
+# carry the per-family accept_rate next to tok/s and
+# ``speedup_vs_nonspec``; generation is temperature 0 because the
+# scheduler only drafts for greedy rows (speculation preserves exact
+# token parity, so spec and baseline emit identical tokens).
+SPEC_SCENARIO = dict(slots=4, prompt_band=(8, 17), gen_band=(96, 97),
+                     motif_len=2, n_req=8, spec_k=6)
+SPEC_SCENARIO_SMOKE = dict(slots=2, prompt_band=(6, 9), gen_band=(48, 49),
+                           motif_len=2, n_req=4, spec_k=6)
+
 
 def _workload(rng, n, p_band, g_band, vocab):
     reqs = []
@@ -497,6 +513,88 @@ def _open_loop_rows(cfg, model, params, sc: Dict, family: str = "lm"
     return rows, meta
 
 
+def _spec_rows(cfg, model, params, sc: Dict, family: str = "lm"
+               ) -> Tuple[List[Dict], Dict]:
+    """Two prompt mixes (repetitive / random) through two continuous
+    engines — n-gram draft-verify speculation on vs off — as equal
+    interleaved contenders through ``measure_group``.
+
+    Both engines decode the same greedy workload, so their token output
+    is identical (the speculative parity contract, pinned by
+    tests/test_serve_spec.py); the rows compare pure wall.  accept_rate
+    comes from the spec engine's stats (accepted draft tokens / drafted
+    tokens over the last timed pass)."""
+    page = 8
+    rng = np.random.default_rng(31)
+    # cross-context families (audio/vlm) need their stub context at
+    # submit; one shared context keeps the comparison about decode wall
+    extra = stub_context(cfg, rng)
+    motif = rng.integers(1, cfg.vocab_size, size=sc["motif_len"])
+    mixes: Dict[str, List] = {}
+    for mix in ("repetitive", "random"):
+        reqs = []
+        for _ in range(sc["n_req"]):
+            plen = int(rng.integers(*sc["prompt_band"]))
+            if mix == "repetitive":
+                prompt = np.tile(motif, -(-plen // len(motif)))[:plen]
+            else:
+                prompt = rng.integers(1, cfg.vocab_size, size=plen)
+            reqs.append((prompt.astype(np.int64),
+                         int(rng.integers(*sc["gen_band"]))))
+        mixes[mix] = reqs
+    max_len = -(-(max(sc["prompt_band"]) + max(sc["gen_band"])) // page) * page
+
+    engines = {
+        "spec": ContinuousBatchingEngine(
+            model, params, n_slots=sc["slots"], max_len=max_len,
+            page_size=page, prefill_chunk=8,
+            spec_decode=True, spec_k=sc["spec_k"]),
+        "nonspec": ContinuousBatchingEngine(
+            model, params, n_slots=sc["slots"], max_len=max_len,
+            page_size=page, prefill_chunk=8),
+    }
+
+    rows: List[Dict] = []
+    meta: Dict = {"spec_k": sc["spec_k"], "accept_rate": {}}
+    for mix, reqs in mixes.items():
+        def _pass(eng, reqs=reqs):
+            def setup():
+                eng.reset()
+                for prompt, glen in reqs:
+                    eng.submit(prompt, glen, extra=extra)
+            return (eng.run, (), setup)
+
+        ms = measure_group(
+            {name: _pass(eng) for name, eng in engines.items()},
+            reps=REPEATS, warmup=1, jit=False)
+
+        base = ms["nonspec"].median_s
+        for name, eng in engines.items():
+            s = eng.stats.summary()      # last pass (reset per repeat)
+            m = ms[name]
+            rows.append({
+                "family": family, "arch": cfg.arch_id,
+                "mix": f"spec_{mix}", "engine": "continuous",
+                "speculative": name == "spec",
+                "spec_k": sc["spec_k"] if name == "spec" else 0,
+                "slots": sc["slots"], "requests": sc["n_req"],
+                "tok_per_s": s["generated_tokens"] / m.median_s,
+                "wall_s_median": m.median_s,
+                "wall_s_all": [round(w, 4) for w in m.all_s],
+                "generated_tokens": s["generated_tokens"],
+                "accept_rate": s["accept_rate"],
+                "drafted_tokens": s["drafted_tokens"],
+                "accepted_draft_tokens": s["accepted_draft_tokens"],
+                "speedup_vs_nonspec": base / m.median_s,
+                "model_flops": s["model_flops"],
+                "model_bytes": s["model_bytes"],
+                "roofline_utilization": roofline_fraction(
+                    s["model_flops"], s["model_bytes"], m.median_s)})
+        meta["accept_rate"][f"{family}/{mix}"] = (
+            engines["spec"].stats.summary()["accept_rate"])
+    return rows, meta
+
+
 def _sharded_mesh(count: int, sp_kv: bool):
     if count == 1:
         return None                      # the strict single-device path
@@ -622,9 +720,54 @@ def run(measure: bool = True,
         sharded: bool = False,
         sp_kv: bool = False,
         retune: bool = False,
-        open_loop: bool = False) -> List[Dict]:
+        open_loop: bool = False,
+        speculative: bool = False) -> List[Dict]:
     rows: List[Dict] = []
     smoke = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+    if speculative:
+        # its own artifact (serve_bench_speculative.json): n-gram
+        # draft-verify speculation vs the plain decode loop per family,
+        # on a repetitive and a random prompt mix
+        sc = SPEC_SCENARIO_SMOKE if smoke else SPEC_SCENARIO
+        # default: every family (the per-family accept-rate x tok/s
+        # surface); the CI smoke pins just audio, the draft-friendliest
+        # family (its decoder falls into short greedy cycles the
+        # prompt-lookup drafter locks onto), where the repetitive-mix
+        # ordering assertion must hold
+        fams = families or (["audio"] if smoke else list(FAMILY_ARCHS))
+        if "all" in fams:
+            fams = list(FAMILY_ARCHS)
+        unknown = sorted(set(fams) - set(FAMILY_ARCHS))
+        if unknown:
+            raise SystemExit(
+                f"unknown families {unknown}; choose from "
+                f"{sorted(FAMILY_ARCHS)} or 'all'")
+        per_family_meta: Dict[str, Dict] = {}
+        for fam in fams:
+            cfg = reduced_config(FAMILY_ARCHS[fam])
+            model = build_model(cfg)
+            params = model.init_params(jax.random.key(0))
+            r, smeta = _spec_rows(cfg, model, params, sc, fam)
+            rows += r
+            per_family_meta[fam] = smeta
+        common.save_result(
+            "serve_bench_speculative", rows,
+            meta={"reduced": True, "repeats": REPEATS,
+                  "statistic": "median", "smoke": smoke, "families": fams,
+                  "speculative": per_family_meta})
+        common.print_table(
+            "speculative decoding: n-gram draft-verify vs plain decode "
+            "(continuous engine, median of interleaved repeats)", rows,
+            ["family", "mix", "speculative", "generated_tokens",
+             "accept_rate", "tok_per_s", "speedup_vs_nonspec"],
+            widths={"family": 7, "mix": 16, "speculative": 11,
+                    "speedup_vs_nonspec": 19})
+        print("-> both contenders emit identical greedy tokens (the "
+              "speculative parity contract); accept_rate = accepted "
+              "draft tokens / drafted.  Repetitive prompts feed the "
+              "prompt-lookup drafter from step one; on random prompts "
+              "it can only lock onto the model's own greedy cycles.")
+        return rows
     if open_loop:
         # its own artifact (serve_bench_open_loop.json): latency rows
         # carry the new schema-validated ``latency`` block, and the
@@ -820,7 +963,14 @@ if __name__ == "__main__":
                          "Poisson rate sweep + trace replay (writes "
                          "serve_bench_open_loop.json; REPRO_BENCH_SMOKE=1 "
                          "for tiny shapes)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="run only the speculative-decoding scenario: "
+                         "n-gram draft-verify vs plain decode on "
+                         "repetitive + random prompt mixes (writes "
+                         "serve_bench_speculative.json; "
+                         "REPRO_BENCH_SMOKE=1 for tiny shapes)")
     args = ap.parse_args()
     run(families=args.families.split(",") if args.families else None,
         prefix_only=args.prefix_only, sharded=args.sharded,
-        sp_kv=args.sp_kv, retune=args.retune, open_loop=args.open_loop)
+        sp_kv=args.sp_kv, retune=args.retune, open_loop=args.open_loop,
+        speculative=args.speculative)

@@ -19,6 +19,13 @@ Open-loop serving (requests *arrive* on a clock instead of queueing up
 front; prints each request's TTFT / worst TBT and the latency summary):
 
   PYTHONPATH=src python examples/serve_decode.py --open-loop --rate 20
+
+Speculative decoding (n-gram draft-verify; temp-0 output is identical
+to the plain engine — only the step count and tok/s change; whisper-base
+is the draft-friendliest reduced family):
+
+  PYTHONPATH=src python examples/serve_decode.py --arch whisper-base \
+      --speculative --spec-k 6
 """
 import argparse
 
@@ -59,6 +66,12 @@ def main():
                          "TTFT / TBT and the latency summary")
     ap.add_argument("--rate", type=float, default=20.0,
                     help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="n-gram draft-verify speculative decoding "
+                         "(temp-0 output is bit-identical; steps drop "
+                         "when the trajectory is draftable)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens per verify step")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -68,9 +81,11 @@ def main():
     engine = ContinuousBatchingEngine(
         model, params, n_slots=args.slots, max_len=args.max_len,
         page_size=args.page_size, prefill_chunk=args.prefill_chunk,
-        prefix_cache=args.prefix_cache, mesh=mesh, sp_kv=args.sp_kv)
+        prefix_cache=args.prefix_cache, mesh=mesh, sp_kv=args.sp_kv,
+        spec_decode=args.speculative, spec_k=args.spec_k)
     print(f"family={cfg.family}: continuous batching via DecodeState"
           + (" + prefix cache" if engine.prefix_cache else "")
+          + (f" + speculative k={args.spec_k}" if args.speculative else "")
           + (f" + {engine.n_shards} slot shard(s) over mesh "
              f"{engine.sharding_meta['mesh']}" if mesh is not None else ""))
 
@@ -154,6 +169,11 @@ def main():
         print(f"prefix cache: {s['prefix_hit_tokens']} prompt tokens "
               f"copied from pooled donor rows instead of re-prefilled "
               f"(hit rate {s['prefix_hit_rate']:.2f})")
+    if args.speculative:
+        print(f"speculative: {s['accepted_draft_tokens']} of "
+              f"{s['drafted_tokens']} drafted tokens accepted "
+              f"(accept_rate {s['accept_rate']:.2f}) — "
+              f"{s['generated_tokens']} tokens in {s['steps']} steps")
 
 
 if __name__ == "__main__":

@@ -55,6 +55,11 @@ PY
     # own serve_bench_open_loop.json artifact; rows carry the new
     # schema-validated "latency" block (TTFT/TBT/E2E + goodput)
     REPRO_BENCH_SMOKE=1 python -m benchmarks.serve_bench --open-loop
+    # speculative decoding scenario at tiny shapes: n-gram draft-verify
+    # vs the plain decode loop as interleaved contenders on repetitive
+    # and random prompt mixes (audio family — the draft-friendliest),
+    # written to its own serve_bench_speculative.json artifact
+    REPRO_BENCH_SMOKE=1 python -m benchmarks.serve_bench --speculative
     python -m repro.perf --validate benchmarks/results
     # the open-loop artifact must carry a complete latency surface per
     # arrival rate (the --validate pass checks shape; this checks content)
@@ -79,6 +84,40 @@ print(f"[bench-smoke] open-loop rows ok: "
       + ", ".join(f"{r['arrival']}@{r['rate_factor']:g}x "
                   f"ttft_p50={r['ttft_p50_s'] * 1e3:.2f}ms "
                   f"goodput={r['goodput_tok_s']:.0f}tok/s" for r in rows))
+PY
+    # the speculative artifact must carry the accept-rate surface and
+    # the spec contender must beat its interleaved non-speculative
+    # baseline on the repetitive mix (ordering, not a ratio — medians of
+    # interleaved repeats make the comparison robust to absolute noise)
+    python - <<'PY'
+import json
+rep = json.load(open("benchmarks/results/serve_bench_speculative.json"))
+rows = rep["rows"]
+assert rows, "speculative artifact has no rows"
+mixes = {r["mix"] for r in rows}
+assert mixes == {"spec_repetitive", "spec_random"}, f"bad mixes {mixes}"
+for r in rows:
+    assert "accept_rate" in r and "drafted_tokens" in r, (
+        f"{r['family']}/{r['mix']}: accept-rate surface missing")
+spec = {(r["family"], r["mix"]): r for r in rows if r["speculative"]}
+base = {(r["family"], r["mix"]): r for r in rows if not r["speculative"]}
+assert set(spec) == set(base), "spec/nonspec contender rows must pair up"
+for (fam, mix), s in sorted(spec.items()):
+    b = base[(fam, mix)]
+    assert s["generated_tokens"] == b["generated_tokens"], (
+        f"{fam}/{mix}: token parity broken "
+        f"({s['generated_tokens']} vs {b['generated_tokens']})")
+    if mix == "spec_repetitive":
+        assert s["tok_per_s"] >= b["tok_per_s"], (
+            f"{fam}/{mix}: speculation lost to baseline "
+            f"({s['tok_per_s']:.0f} vs {b['tok_per_s']:.0f} tok/s)")
+    assert s["accept_rate"] > 0 and s["drafted_tokens"] > 0, (
+        f"{fam}/{mix}: drafter never proposed/accepted")
+acc = rep["meta"]["speculative"]
+assert all("accept_rate" in m for m in acc.values()), "meta accept_rate gone"
+print("[bench-smoke] speculative rows ok: " + ", ".join(
+    f"{fam}/{mix.removeprefix('spec_')} accept={s['accept_rate']:.2f} "
+    f"x{s['speedup_vs_nonspec']:.2f}" for (fam, mix), s in sorted(spec.items())))
 PY
     # the serve artifact must carry the trace-lint verdict on the very
     # decode programs it timed (ContinuousBatchingEngine(analyze=True)),

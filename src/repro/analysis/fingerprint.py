@@ -44,6 +44,7 @@ FINGERPRINT_VERSION = 1
 TARGETS = (
     "serve.decode_step.paged",
     "serve.decode_step.xla",
+    "serve.decode_step.spec",
     "serve.prefill_row",
     "serve.frontend_step",
     "kernels.gemm",
@@ -119,6 +120,13 @@ def _serve_engines(names) -> Dict[str, Any]:
     if "serve.decode_step.xla" in names:
         engines["xla"] = ContinuousBatchingEngine(
             model, params, paged_kernel=False, **kw)
+    if "serve.decode_step.spec" in names:
+        # the speculative verify step (serve/draft.py draft-verify):
+        # 1 + spec_k query columns per decode row, gather-free
+        # acceptance + ragged commit — pinned so the accept/commit
+        # lowering cannot silently regress into a gather
+        engines["spec"] = ContinuousBatchingEngine(
+            model, params, spec_decode=True, spec_k=4, **kw)
     if "serve.frontend_step" in names:
         engines["frontend"] = ContinuousBatchingEngine(
             model, params, chunk_policy="stall_free", tbt_target_s=0.05,
@@ -130,6 +138,8 @@ def _trace_engine_program(engine, which: str, label: str, verdicts
                           ) -> Dict[str, Any]:
     sa = serve_step_args(engine)
     fn = (engine._make_prefill_fn() if which == "prefill"
+          else engine._make_spec_decode_fn()
+          if getattr(engine, "spec_decode", False)
           else engine._make_decode_fn())
     with sa["ctx"]():
         rep = trace_program(fn, *sa[which], donate_argnums=(1, 2, 3),
@@ -208,6 +218,9 @@ def collect_fingerprints(targets: Optional[Sequence[str]] = None, *,
     if "serve.decode_step.xla" in wanted:
         out["serve.decode_step.xla"] = _trace_engine_program(
             engines["xla"], "decode", "serve.decode_step.xla", verdicts)
+    if "serve.decode_step.spec" in wanted:
+        out["serve.decode_step.spec"] = _trace_engine_program(
+            engines["spec"], "decode", "serve.decode_step.spec", verdicts)
     if "serve.prefill_row" in wanted:
         out["serve.prefill_row"] = _trace_engine_program(
             engines["paged"], "prefill", "serve.prefill_row", verdicts)

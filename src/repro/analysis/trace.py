@@ -289,8 +289,11 @@ def serve_step_args(engine) -> Dict[str, Any]:
     # decode: (params, cache, out_buf, prev_sampled, tokens, token_src,
     #          positions, n_valid, temperatures, out_rows, out_idx,
     #          step_idx, any_temp[static][, page_idx])
-    decode_args = (params_s, cache_s, out_s, prev_s, sds((n, 1), i32),
-                   sds((n,), jnp.bool_), sds((n, 1), i32), sds((n,), i32),
+    # speculative engines feed 1 + spec_k token/position columns per
+    # decode row (the verify step); plain engines keep width 1
+    w = 1 + (engine.spec_k if getattr(engine, "spec_decode", False) else 0)
+    decode_args = (params_s, cache_s, out_s, prev_s, sds((n, w), i32),
+                   sds((n,), jnp.bool_), sds((n, w), i32), sds((n,), i32),
                    sds((n,), f32), sds((n,), i32), sds((n,), i32),
                    sds((), i32), False)
     paged = bool(getattr(engine, "paged_kernel", False))
@@ -339,8 +342,11 @@ def analyze_serve_engine(engine, *, calibration=None) -> Dict[str, Any]:
     n_findings = 0
     worst = None
     rank = {"info": 0, "warning": 1, "error": 2}
+    decode_fn = (engine._make_spec_decode_fn()
+                 if getattr(engine, "spec_decode", False)
+                 else engine._make_decode_fn())
     for label, fn, args in (
-            ("decode_step", engine._make_decode_fn(), sa["decode"]),
+            ("decode_step", decode_fn, sa["decode"]),
             ("prefill_row", engine._make_prefill_fn(), sa["prefill"])):
         with ctx():
             rep = trace_program(fn, *args, donate_argnums=(1, 2, 3),

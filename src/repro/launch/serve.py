@@ -105,7 +105,21 @@ def main():
                     help="stall_free chunk policy: the decode "
                          "time-between-tokens bound (seconds) chunks "
                          "are sized against")
+    ap.add_argument("--speculative", action="store_true",
+                    help="n-gram draft-verify speculative decoding: "
+                         "verify up to --spec-k drafted tokens per row "
+                         "per step (greedy rows only; identical tokens, "
+                         "fewer steps)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max draft tokens verified per row per step")
+    ap.add_argument("--record-trace", default=None, metavar="PATH",
+                    help="open-loop only: write the run's completed "
+                         "arrivals as a replayable repro.serve.trace "
+                         "JSON workload file (replay with --trace PATH)")
     args = ap.parse_args()
+    if args.record_trace and not args.open_loop:
+        raise SystemExit("--record-trace needs --open-loop (it records "
+                         "the front end's completed arrivals)")
 
     cfg = (reduced_config(args.arch) if args.reduced
            else get_config(args.arch))
@@ -153,7 +167,8 @@ def main():
         page_size=page, prefill_chunk=args.prefill_chunk,
         chunk_policy=args.chunk_policy, tbt_target_s=args.tbt_target,
         prefix_cache=args.prefix_cache, prefix_pool=args.prefix_pool,
-        mesh=mesh, sp_kv=args.sp_kv)
+        mesh=mesh, sp_kv=args.sp_kv,
+        spec_decode=args.speculative, spec_k=args.spec_k)
     if args.prefix_cache and not engine.prefix_cache:
         print(f"[serve] family {cfg.family!r} has non-token-addressable "
               "(recurrent) decode state; prefix cache disabled")
@@ -196,6 +211,13 @@ def main():
                                        extra=extra)
                 label = f"poisson rate={args.rate}/s"
         res = OpenLoopFrontend(engine).run(arr)
+        if args.record_trace:
+            from repro.serve import save_trace
+            save_trace(args.record_trace, res.completed_arrivals)
+            print(f"[serve] recorded {len(res.completed_arrivals)} "
+                  f"completed arrival(s) -> {args.record_trace} "
+                  f"(replay with --arrival trace --trace "
+                  f"{args.record_trace})")
         lat = res.summary()
         ttft = (args.slo_ttft if args.slo_ttft is not None
                 else 3 * lat["ttft_s"]["p50"])
@@ -221,6 +243,12 @@ def main():
                   f"tbt<={slo.tbt_s * 1e3:.1f}ms): "
                   f"attainment={lat['slo']['attainment']:.2f} "
                   f"goodput={lat['goodput_tok_s']:.1f} tok/s")
+        if args.speculative:
+            es = res.engine_summary
+            print(f"[serve]   speculative k={args.spec_k}: "
+                  f"accept_rate={es['accept_rate']:.2f} "
+                  f"({es['accepted_draft_tokens']}/{es['drafted_tokens']}"
+                  f" draft tokens accepted)")
         if args.chunk_policy == "stall_free":
             print(f"[serve]   stall-free chunks: last width "
                   f"{engine.sched.last_chunk_width} "
@@ -247,6 +275,11 @@ def main():
         print(f"[serve] prefix cache: {s['prefix_hit_tokens']} prompt "
               f"tokens served from pooled pages "
               f"(hit rate {s['prefix_hit_rate']:.2f})")
+    if args.speculative:
+        print(f"[serve] speculative k={args.spec_k}: "
+              f"accept_rate={s['accept_rate']:.2f} "
+              f"drafted={s['drafted_tokens']} "
+              f"accepted={s['accepted_draft_tokens']}")
     first = engine.requests()[0]
     print(f"[serve] sample rid={first.rid}: "
           f"{first.generated[:12]}")

@@ -154,6 +154,40 @@ def copy_state_prefix(state: Params, specs: Params, src_slot, dst_slot,
     return constrain_state(jax.tree.unflatten(treedef, out), specs)
 
 
+def adjust_state_counters(state: Params, specs: Params, delta) -> Params:
+    """Subtract per-slot ``delta`` (B,) int from every per-slot integer
+    counter leaf — leaves whose spec names no axis but ``"batch"`` (the
+    attention cache ``pos``), the same leaf class ``copy_state_prefix``
+    sets.  This is the speculative-decode rewind: a verify step's ragged
+    write advances each row's counter by the fed width ``n_fed``; after
+    greedy acceptance the engine pulls the counter back to the accepted
+    frontier (``delta = n_fed - n_accept >= 0``, 0 for untouched rows)
+    so the next step appends there.  Token-addressable ``kv_seq`` leaves
+    are left alone — entries past the rewound counter are invisible
+    under the ``kv_valid = pos + step`` mask contract and are simply
+    overwritten by the next step's writes.
+
+    Only meaningful for adapters whose counters are the *sole* recurrent
+    summary (``token_addressable = True``); ssm/hybrid recurrent state
+    advances inside the scan and is rewound by replaying the verify
+    forward with ``n_valid = n_accept`` instead.  jit-compatible
+    (``delta`` may be traced)."""
+    leaves, treedef = jax.tree.flatten(state)
+    spec_leaves = treedef.flatten_up_to(specs)
+    delta = jnp.asarray(delta)
+    out = []
+    for leaf, spec in zip(leaves, spec_leaves):
+        if (jnp.issubdtype(leaf.dtype, jnp.integer)
+                and all(a is None or a == "batch" for a in spec)):
+            bax = spec.index("batch")
+            shape = [1] * leaf.ndim
+            shape[bax] = leaf.shape[bax]
+            out.append(leaf - delta.astype(leaf.dtype).reshape(shape))
+        else:
+            out.append(leaf)
+    return constrain_state(jax.tree.unflatten(treedef, out), specs)
+
+
 def reset_state_slots(state: Params, specs: Params,
                       slot_mask: jax.Array) -> Params:
     """Zero the state rows (KV entries, positions, recurrent state,
@@ -236,6 +270,14 @@ class DecodeStateAdapter:
     # their conv/SSD state summarizes the full history and cannot be
     # truncated, so the serve prefix cache never matches them.
     prefix_cachable: bool = False
+    # True when every stateful write is addressed by token position
+    # (kv_seq leaves) under a per-slot counter: the speculative verify
+    # step may then commit in place and rewind only the counters
+    # (``adjust_state_counters``) to the accepted frontier.  Recurrent
+    # families override to False — their scan state advances per step,
+    # so the engine replays the verify forward with ``n_valid =
+    # n_accept`` against the pre-step state instead (two-pass commit).
+    token_addressable: bool = True
 
     def context_tokens(self, cfg) -> int:
         return 0
@@ -272,6 +314,8 @@ class AttentionDecodeState(DecodeStateAdapter):
 class SSMDecodeState(DecodeStateAdapter):
     """ssm: one recurrent (conv window + SSD ``h``) state per layer."""
 
+    token_addressable = False
+
     def init(self, model, batch, max_len):
         return {"layers": _rep(mamba2.init_state(model.cfg, batch),
                                model.n_periods)}
@@ -283,6 +327,8 @@ class SSMDecodeState(DecodeStateAdapter):
 class HybridDecodeState(DecodeStateAdapter):
     """hybrid (Jamba): per period, one attention KV + a stack of
     per-mamba-sublayer recurrent states."""
+
+    token_addressable = False
 
     def init(self, model, batch, max_len):
         cfg = model.cfg

@@ -192,6 +192,15 @@ class LM:
         return decode_state.reset_state_slots(cache, self.cache_specs(),
                                               slot_mask)
 
+    def adjust_cache_counters(self, cache: Params, delta) -> Params:
+        """Subtract per-slot ``delta`` (B,) from the cache's position
+        counters — the speculative-decode rewind to the accepted
+        frontier (``decode_state.adjust_state_counters``; only valid
+        for ``decode_state.token_addressable`` families).
+        jit-compatible (``delta`` may be traced)."""
+        return decode_state.adjust_state_counters(cache, self.cache_specs(),
+                                                  delta)
+
     def install_cache_prefix(self, cache: Params, src_slot, dst_slot,
                              n_tokens) -> Params:
         """Copy the first ``n_tokens`` token entries of ``src_slot``'s KV

@@ -163,9 +163,45 @@ full conservation pass per step and ``run()`` a drain audit.  Cost is
 host-side dict bookkeeping only (no jax), so the tier1 serve tests
 run every engine with the checker on (tests/conftest.py).
 
+**Speculative decoding** (``ContinuousBatchingEngine(spec_decode=True,
+spec_k=k)``): the model-free n-gram drafter (``serve/draft.py``,
+:class:`NGramDrafter`) proposes up to ``k`` continuation tokens per
+greedy decode row from a prompt-lookup over the request's own history;
+the engine's verify step scores all ``1 + k`` positions in one forward
+through the same paged decode kernel.  The speculative contract:
+
+  * **Acceptance rule** — greedy/temp-0 only: the accepted draft is the
+    longest prefix of the proposal matching the verify pass's argmax at
+    each position, plus the one model-sampled token that follows it
+    (so every verify step commits 1..k+1 tokens per row and the token
+    stream is *identical* to the non-speculative engine's; temperature
+    rows never carry drafts).  Recurrent families (ssm/hybrid) verify
+    through a two-pass masked recurrence — score wide, then re-advance
+    the state by the accepted count.
+  * **k-token commit** — acceptance feeds the scheduler's ``n_valid``
+    ragged write: pages for the full fed width are grown *before* the
+    step (a mid-step alloc after acceptance is a contract violation the
+    scheduler raises on) and the unaccepted tail of the reserve is
+    shrunk back at commit.
+  * **TBT event semantics** — a multi-token step emits one event per
+    committed token at the same step timestamp: time-between-tokens
+    within a verify step is 0, the step wall lands on the gap to the
+    row's *previous* step (``serve/slo.py``), and throughput metrics
+    count committed tokens, not steps.
+  * **Adaptive throttle** — per-request acceptance EMAs quiet the
+    drafter when the model keeps rejecting (probing periodically), and
+    draft-less steps dispatch the engine's plain single-token program,
+    so incompressible workloads degrade to ~plain-engine cost instead
+    of paying the wide verify for nothing.
+
+``spec_decode=False`` (default) leaves the engine bit-for-bit the
+non-speculative program (pinned by the ``serve.decode_step.*``
+fingerprint baselines; parity by tests/test_serve_spec.py).
+
 Remaining serve roadmap: per-shard intake queues feeding the admission
 ranking, batched multi-row prefill chunks amortizing per-chunk
-dispatch, and an HTTP/streaming layer over the frontend.
+dispatch, a learned/draft-model drafter behind the NGramDrafter
+interface, and an HTTP/streaming layer over the frontend.
 
 ``StaticBatchEngine`` remains the run-to-completion baseline used by the
 per-family temperature-0 parity tests and benchmarks/serve_bench.py;
@@ -188,6 +224,7 @@ from repro.serve.cache import (  # noqa: F401
     PrefixEntry,
     context_key,
 )
+from repro.serve.draft import NGramDrafter  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     ContinuousBatchingEngine,
     EngineStats,

@@ -532,6 +532,30 @@ class PagedKVCache:
         info.length = new_len
         return True
 
+    def shrink(self, slot: int, n_tokens: int) -> None:
+        """Un-commit the last ``n_tokens`` tokens of ``slot``, freeing
+        tail pages that fall empty.  This is the speculative-decode
+        reserve release: a verify step grows the slot by the full fed
+        width up front (so no allocation can fail mid-step), then
+        shrinks back to the accepted frontier after acceptance.  The
+        caller must only shrink tokens it grew this step — never into
+        prefix-shared prompt pages — which the scheduler guarantees by
+        bounding the shrink by the step's own reserve."""
+        if n_tokens == 0:
+            return
+        info = self.slots[slot]
+        if n_tokens < 0 or n_tokens > info.length:
+            raise RuntimeError(
+                f"slot {slot}: cannot shrink {n_tokens} token(s) out of "
+                f"{info.length}")
+        table = self.tables[self.shard_of(slot)]
+        new_len = info.length - n_tokens
+        keep = table.pages_for(new_len)
+        if keep < len(info.pages):
+            table.free(info.pages[keep:])
+            del info.pages[keep:]
+        info.length = new_len
+
     def release(self, slot: int) -> None:
         """Free the slot and drop its page references (aux included);
         pages shared with pooled prefixes or other slots stay allocated."""

@@ -158,8 +158,16 @@ class EngineStats:
     # prompt tokens whose prefill was skipped via the prefix cache
     # (mirrors Scheduler.prefix_hit_tokens)
     prefix_hit_tokens: int = 0
+    # speculative decoding: draft tokens fed to verify steps, and how
+    # many of them the greedy acceptance rule kept (the bonus token at
+    # the frontier is a normal sample, counted in generated_tokens but
+    # never here) — accept_rate = accepted / drafted
+    drafted_tokens: int = 0
+    accepted_draft_tokens: int = 0
 
     def summary(self) -> Dict[str, float]:
+        accept_rate = (self.accepted_draft_tokens / self.drafted_tokens
+                       if self.drafted_tokens else 0.0)
         if not self.steps:
             # an empty drain (e.g. an open-loop tail that completed zero
             # requests) must still return the FULL key set — 0.0 rates,
@@ -173,6 +181,9 @@ class EngineStats:
                     "model_tflops_per_s": 0.0,
                     "prefix_hit_tokens": self.prefix_hit_tokens,
                     "prefix_hit_rate": 0.0,
+                    "drafted_tokens": self.drafted_tokens,
+                    "accepted_draft_tokens": self.accepted_draft_tokens,
+                    "accept_rate": accept_rate,
                     "note": "zero steps executed"}
         walls = sorted(s.wall_s for s in self.steps)
         prefill_tokens = sum(s.n_prefill_tokens for s in self.steps)
@@ -201,6 +212,10 @@ class EngineStats:
             "prefix_hit_tokens": self.prefix_hit_tokens,
             "prefix_hit_rate": (self.prefix_hit_tokens / prompt_total
                                 if prompt_total else 0.0),
+            # speculative decoding (0 / 0.0 with spec_decode off)
+            "drafted_tokens": self.drafted_tokens,
+            "accepted_draft_tokens": self.accepted_draft_tokens,
+            "accept_rate": accept_rate,
         }
 
 
@@ -231,6 +246,21 @@ class ContinuousBatchingEngine:
     included.  Recurrent families (ssm, hybrid) run with the cache off
     (a UserWarning names the family): their conv/SSD state cannot be
     truncated to a prefix.
+
+    ``spec_decode=True`` turns on draft-verify **speculative decoding**
+    (``spec_k`` = max drafted tokens per row per step): a model-free
+    n-gram drafter (serve/draft.py) proposes continuations from each
+    request's own prompt + committed tokens, one verify forward scores
+    all ``spec_k + 1`` columns per decode row through the same
+    paged-attention ragged-mask contract, and greedy acceptance commits
+    the longest draft prefix matching the argmax chain plus one bonus
+    token — per-row variable commit via the ``n_valid`` ragged write
+    (token-addressable families rewind position counters in place;
+    ssm/hybrid replay their masked recurrence with ``n_valid =
+    n_accept``).  Temp-0 token streams are identical to ``spec_decode=
+    False``, which itself stays byte-identical to the unspeculative
+    engine; sampled (temp>0) rows never carry drafts.
+    ``EngineStats.accept_rate`` reports drafted vs accepted tokens.
 
     ``mesh`` makes the engine **mesh-aware**: the decode slot ("batch")
     axis shards over the mesh's ``("pod", "data")`` axes and parameters /
@@ -280,11 +310,22 @@ class ContinuousBatchingEngine:
                  prefix_cache: bool = False, prefix_pool: int = 8,
                  mesh=None, rules=None, sp_kv: bool = False,
                  paged_kernel: Optional[bool] = None, retune: bool = False,
+                 spec_decode: bool = False, spec_k: int = 4,
                  analyze: bool = False, check: Optional[bool] = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
+        # speculative multi-token decoding (draft-verify): spec_k is the
+        # max drafted tokens per decode row per step, so the compiled
+        # decode step is (n_slots, spec_k + 1) wide.  With spec_decode
+        # off, spec_k is forced to 0 and every compiled shape, closure,
+        # and commit path is byte-identical to the unspeculative engine.
+        if spec_decode and spec_k < 1:
+            raise ValueError(
+                f"spec_decode=True needs spec_k >= 1, got {spec_k}")
+        self.spec_decode = bool(spec_decode)
+        self.spec_k = int(spec_k) if self.spec_decode else 0
         # prefix caching only applies to families whose whole decode
         # state is a token prefix (attention KV + pos + installed
         # context); recurrent families run with the pool disabled and a
@@ -305,6 +346,7 @@ class ContinuousBatchingEngine:
         self._cache_sharding = None
         self._slot_sharding = None
         self._out_sharding = None
+        self._spec_tok_sharding = None
         if mesh is not None:
             self.rules = (dict(rules) if rules is not None
                           else rules_for(model.cfg, mesh, sp_kv=sp_kv))
@@ -316,7 +358,20 @@ class ContinuousBatchingEngine:
             n_shards=self.n_shards)
         self.sched = Scheduler(self.kv, prefill_chunk=prefill_chunk,
                                eos_id=eos_id, chunk_policy=chunk_policy,
-                               tbt_target_s=tbt_target_s)
+                               tbt_target_s=tbt_target_s,
+                               spec_k=self.spec_k)
+        # model-free n-gram drafter (serve/draft.py): host-side prompt
+        # lookup over each request's committed tokens, feeding the
+        # scheduler's draft columns.  Only built when speculation is on.
+        self.drafter = None
+        # rids whose drafter history misses tokens committed by no-draft
+        # fast-path steps (which skip the host readback); resynced from
+        # out_buf right before the rid next proposes
+        self._draft_stale: set = set()
+        if self.spec_decode:
+            from repro.serve.draft import NGramDrafter
+            self.drafter = NGramDrafter(self.spec_k,
+                                        **self._drafter_throttle())
         # shadow-state checker (repro.analysis.schedcheck): pure Python,
         # no jax — wraps this (kv, sched) pair's transitions and re-derives
         # the page/slot invariants after every step.  Imported lazily so
@@ -374,10 +429,29 @@ class ContinuousBatchingEngine:
         # actually reused in place across steps
         triple_sh = (self._slot_sharding, self._cache_sharding,
                      self._out_sharding)
-        self._decode_fn = self._jit(self._make_decode_fn(),
-                                    donate_argnums=(1, 2, 3),
-                                    static_argnums=(12,),
-                                    out_shardings=triple_sh)
+        if self.spec_decode:
+            # the speculative step returns two extra per-row arrays (the
+            # accepted count and the accepted token values) that the
+            # host reads back every step to feed the drafter
+            self._decode_fn = self._jit(
+                self._make_spec_decode_fn(),
+                donate_argnums=(1, 2, 3), static_argnums=(12,),
+                out_shardings=triple_sh + (self._slot_sharding,
+                                           self._spec_tok_sharding))
+            # no-draft fast path: a step where the drafter proposed
+            # nothing would pay the (1 + spec_k)-wide verify forward to
+            # commit one token per row — dispatch the plain single-token
+            # program instead (the exact spec-off program, so such steps
+            # cost what a non-speculative engine pays)
+            self._plain_decode_fn = self._jit(self._make_decode_fn(),
+                                              donate_argnums=(1, 2, 3),
+                                              static_argnums=(12,),
+                                              out_shardings=triple_sh)
+        else:
+            self._decode_fn = self._jit(self._make_decode_fn(),
+                                        donate_argnums=(1, 2, 3),
+                                        static_argnums=(12,),
+                                        out_shardings=triple_sh)
         self._prefill_fn = self._jit(self._make_prefill_fn(),
                                      donate_argnums=(1, 2, 3),
                                      static_argnums=(12,),
@@ -472,6 +546,8 @@ class ContinuousBatchingEngine:
                 ("batch",), (self.n_slots,))
             self._out_sharding = paxes.named_sharding(
                 ("batch", None), (3 * self.n_slots, self.max_len))
+            self._spec_tok_sharding = paxes.named_sharding(
+                ("batch", None), (self.n_slots, self.spec_k + 1))
             params_sds = jax.tree.map(
                 lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
                 self.params)
@@ -594,6 +670,94 @@ class ContinuousBatchingEngine:
 
         return decode_step
 
+    def _make_spec_decode_fn(self):
+        """Draft-verify decode step (spec_decode=True): one forward over
+        (n_slots, spec_k + 1) columns scores every fed token, greedy
+        acceptance keeps the longest draft prefix matching the argmax
+        chain plus the bonus token at the frontier, and the ragged-write
+        contract commits per-row variable token counts in place.
+
+        Same signature/donation as the plain step, plus two extra
+        outputs: ``n_accept`` (n_slots,) and the accepted token values
+        ``acc`` (n_slots, spec_k + 1) — the host readback that feeds the
+        drafter and the scheduler's variable commit.  Everything on the
+        device side stays gather-free (one-hot/iota selects, ``.at[]``
+        scatters), matching the pinned ``serve.decode_step.spec``
+        fingerprint.
+        """
+        model = self.model
+        S = self.spec_k + 1
+        paged = self.paged_kernel
+        # token-addressable families (dense/moe/vlm/audio) commit in
+        # place: the verify pass's ragged write already stored every fed
+        # token's KV, so acceptance only rewinds the position counters
+        # to the accepted frontier.  Recurrent families (ssm/hybrid)
+        # advance scan state per step, which cannot be rewound — they
+        # replay the sweep with n_valid = n_accept against the pre-step
+        # state instead (two passes over the same step's inputs; the
+        # masked recurrence commits exactly the accepted prefix).
+        two_pass = not model.decode_state.token_addressable
+
+        def spec_decode_step(params, cache, out_buf, prev_sampled, tokens,
+                             token_src, positions, n_valid, temperatures,
+                             out_rows, out_idx, step_idx, any_temp,
+                             page_idx=None):
+            tokens = tokens.at[:, 0].set(
+                jnp.where(token_src, prev_sampled, tokens[:, 0]))
+
+            def forward(c, nv):
+                if paged:
+                    with self._paged_ctx(page_idx):
+                        return model.forward(params, tokens, positions,
+                                             mode="decode", cache=c,
+                                             n_valid=nv)
+                return model.forward(params, tokens, positions,
+                                     mode="decode", cache=c, n_valid=nv)
+
+            logits, new_cache, _ = forward(cache, n_valid)
+            # verify: column i's argmax is the model's next token after
+            # consuming fed tokens 0..i.  Column 0 goes through the
+            # engine's sampler (same key/salt as the plain step, so the
+            # first committed token is sample-for-sample identical);
+            # temp>0 rows never carry drafts, so columns 1.. are greedy
+            # by construction.
+            a = jnp.argmax(logits, axis=-1).astype(jnp.int32)      # (n, S)
+            nxt0 = self._sample(logits[:, 0], temperatures, step_idx, 0,
+                                any_temp)
+            acc = a.at[:, 0].set(nxt0)
+            cols = jnp.arange(S, dtype=jnp.int32)[None, :]
+            # draft token i+1 is accepted iff it was actually fed and
+            # equals committed token i; acceptance = longest matching
+            # prefix + the bonus token at the frontier
+            match = ((acc[:, :-1] == tokens[:, 1:])
+                     & (cols[:, :-1] + 1 < n_valid[:, None]))
+            n_match = jnp.cumprod(match.astype(jnp.int32),
+                                  axis=1).sum(axis=1)
+            n_accept = jnp.where(n_valid > 0, n_match + 1, 0)      # (n,)
+            if two_pass:
+                _, new_cache, _ = forward(
+                    cache, n_accept.astype(n_valid.dtype))
+            else:
+                # stale KV past the rewound counter is invisible under
+                # the kv_valid mask and overwritten by the next step
+                new_cache = model.adjust_cache_counters(
+                    new_cache, n_valid - n_accept)
+            # bonus token at the acceptance frontier chains into the
+            # next step's decode input (one-hot sum, not a gather)
+            sel = cols == jnp.maximum(n_accept - 1, 0)[:, None]
+            bonus = jnp.where(sel, acc, 0).sum(axis=1).astype(jnp.int32)
+            is_sample = out_idx < out_buf.shape[1]
+            prev_sampled = jnp.where(is_sample, bonus, prev_sampled)
+            # scatter the accepted tokens into the slot's output row
+            # (out-of-range columns drop, exactly like the plain step)
+            wcols = jnp.where(cols < n_accept[:, None],
+                              out_idx[:, None] + cols, out_buf.shape[1])
+            out_buf = out_buf.at[out_rows[:, None], wcols].set(
+                acc, mode="drop")
+            return prev_sampled, new_cache, out_buf, n_accept, acc
+
+        return spec_decode_step
+
     def _make_prefill_fn(self):
         model = self.model
         paged = self.paged_kernel
@@ -645,7 +809,13 @@ class ContinuousBatchingEngine:
                                prefill_chunk=self.sched.prefill_chunk,
                                eos_id=self.sched.eos_id,
                                chunk_policy=self.sched.chunk_policy,
-                               tbt_target_s=self.sched.tbt_target_s)
+                               tbt_target_s=self.sched.tbt_target_s,
+                               spec_k=self.spec_k)
+        if self.drafter is not None:
+            from repro.serve.draft import NGramDrafter
+            self.drafter = NGramDrafter(self.spec_k,
+                                        **self._drafter_throttle())
+            self._draft_stale = set()
         if self.check:
             from repro.analysis.schedcheck import SchedChecker
             self.checker = SchedChecker.attach(self.kv, self.sched)
@@ -696,11 +866,112 @@ class ContinuousBatchingEngine:
         req = self.sched.submit(np.asarray(prompt), max_new_tokens,
                                 temperature=temperature, extra=extra,
                                 step=self._step_idx)
+        if self.drafter is not None:
+            self.drafter.add_request(req.rid, req.prompt)
         return req.rid
+
+    def _drafter_throttle(self) -> Dict[int, object]:
+        """Family-aware throttle parameters for the n-gram drafter.
+
+        Recurrent families (ssm/hybrid) verify drafts with the two-pass
+        masked recurrence, so a rejected draft costs roughly twice what
+        it does on a token-addressable family — their break-even
+        acceptance is higher and mispredicted probes hurt more, so they
+        get a higher floor and a sparser probe cadence."""
+        if self.model.decode_state.token_addressable:
+            return {}
+        return dict(accept_floor=0.6, probe_every=32, min_trials=2)
+
+    def _propose_drafts(self) -> Dict[int, np.ndarray]:
+        """Host-side draft pass: ask the n-gram drafter for continuation
+        proposals for every temp-0 decoding slot (speculation is a
+        greedy-acceptance scheme, so sampled rows never carry drafts).
+
+        The adaptive throttle gates first — a throttled request costs
+        nothing here (no history resync, no suffix search) and, once
+        every row is quiet, the whole step takes the no-draft fast path.
+        Histories left stale by fast-path steps (which skip the per-step
+        host readback) are resynced lazily from ``out_buf`` only for the
+        requests that actually get to propose."""
+        from repro.serve.scheduler import RequestState
+        drafts: Dict[int, np.ndarray] = {}
+        for slot, req in self.sched.active.items():
+            if (req.state is RequestState.DECODING
+                    and req.temperature == 0):
+                if self.drafter.throttled(req.rid, self._step_idx):
+                    continue
+                if req.rid in self._draft_stale:
+                    row = int(self._slot_row[slot])
+                    toks = np.asarray(
+                        self._out_buf[row, :req.n_generated])
+                    self.drafter.commit(req.rid, req.n_generated, toks)
+                    self._draft_stale.discard(req.rid)
+                d = self.drafter.propose(req.rid)
+                if len(d):
+                    drafts[slot] = d
+        return drafts
+
+    def _spec_accepted(self, plan: StepPlan, n_acc_dev,
+                       acc_dev) -> Dict[int, np.ndarray]:
+        """Read back this step's accepted tokens per sampled slot (the
+        speculative path's one per-step host sync — the drafter needs
+        the values).  Decode rows take their accepted prefix from the
+        verify outputs; prefill-completing rows sampled exactly one
+        token, which lives in ``prev_sampled``.  A no-draft fast-path
+        step ran the plain program (``n_acc_dev is None``): every
+        sampled row took exactly one token, all from ``prev_sampled``."""
+        accepted: Dict[int, np.ndarray] = {}
+        n_acc = acc = prev_host = None
+        for slot in plan.sample_slots:
+            if plan.token_src[slot] and n_acc_dev is not None:
+                if n_acc is None:
+                    n_acc = np.asarray(n_acc_dev)
+                    acc = np.asarray(acc_dev)
+                accepted[slot] = acc[slot, :max(1, int(n_acc[slot]))].copy()
+            else:
+                if prev_host is None:
+                    prev_host = np.asarray(self._prev_sampled)
+                accepted[slot] = prev_host[slot:slot + 1].copy()
+        return accepted
+
+    def _spec_feedback(self, plan: StepPlan,
+                       accepted: Dict[int, np.ndarray],
+                       row_reqs: Dict[int, Request]) -> None:
+        """Post-commit speculative bookkeeping: mirror committed tokens
+        into the drafter (drop finished requests) and accumulate the
+        draft/accept counters behind ``EngineStats.accept_rate``."""
+        drafted = accepted_draft = 0
+        for slot in plan.sample_slots:
+            req = row_reqs[slot]
+            if plan.token_src[slot]:
+                d = int(plan.n_valid[slot]) - 1
+                a = self.sched.last_commit_counts[slot] - 1
+                drafted += d
+                accepted_draft += a
+                # acceptance feedback drives the drafter's adaptive
+                # throttle (quiet down requests whose drafts keep
+                # getting rejected)
+                self.drafter.feedback(req.rid, d, a)
+            if req.finish_reason:
+                self.drafter.drop(req.rid)
+                self._draft_stale.discard(req.rid)
+            elif req.rid in self._draft_stale:
+                # history already misses fast-path tokens — appending
+                # this commit would leave a gap; the rid stays stale and
+                # resyncs in full from out_buf when it next proposes
+                pass
+            else:
+                self.drafter.commit(req.rid, req.n_generated,
+                                    accepted[slot])
+        self.stats.drafted_tokens += drafted
+        self.stats.accepted_draft_tokens += accepted_draft
 
     def step(self) -> bool:
         """Run one engine iteration; False when no work remains."""
-        plan = self.sched.next_plan(self._step_idx)
+        plan = (self.sched.next_plan(self._step_idx,
+                                     drafts=self._propose_drafts())
+                if self.spec_decode
+                else self.sched.next_plan(self._step_idx))
         if plan is None:
             self.last_plan = None
             self.last_sampled_rids = []
@@ -749,6 +1020,7 @@ class ContinuousBatchingEngine:
                     self.cache = self._install_fn(
                         self.params, self.cache, np.int32(slot), req.extra)
         step_idx = np.int32(self._step_idx)
+        n_acc_dev = acc_dev = None
         if plan.n_decode:
             any_temp = bool((plan.temperatures > 0).any())
             decode_args = (
@@ -758,8 +1030,22 @@ class ContinuousBatchingEngine:
                 step_idx, any_temp)
             if self.paged_kernel:
                 decode_args = decode_args + (self._page_idx,)
-            self._prev_sampled, self.cache, self._out_buf = self._decode_fn(
-                *decode_args)
+            if self.spec_decode and not (plan.n_valid > 1).any():
+                # no drafts in flight this step: run the plain
+                # single-token program (byte-identical to the spec-off
+                # step) instead of the wide verify forward
+                plain_args = (decode_args[:4]
+                              + (plan.tokens[:, :1], plan.token_src,
+                                 plan.positions[:, :1])
+                              + decode_args[7:])
+                (self._prev_sampled, self.cache,
+                 self._out_buf) = self._plain_decode_fn(*plain_args)
+            elif self.spec_decode:
+                (self._prev_sampled, self.cache, self._out_buf,
+                 n_acc_dev, acc_dev) = self._decode_fn(*decode_args)
+            else:
+                (self._prev_sampled, self.cache,
+                 self._out_buf) = self._decode_fn(*decode_args)
         for pf in plan.prefills:
             self._prev_sampled, self.cache, self._out_buf = self._prefill_fn(
                 self.params, self.cache, self._out_buf, self._prev_sampled,
@@ -781,10 +1067,36 @@ class ContinuousBatchingEngine:
             for s in np.nonzero(plan.reset_mask)[0]
             if int(s) in self.sched.active]
         # EOS detection is the only per-step host sync; count-based
-        # finishing leaves the device queue free-running
+        # finishing leaves the device queue free-running.  A speculative
+        # *verify* step syncs (the drafter needs the committed token
+        # values), but a no-draft fast-path step commits exactly one
+        # token per row like a plain step — the drafter's histories are
+        # just marked stale and lazily resynced from ``out_buf`` at the
+        # next proposal, so draft-less stretches keep the device queue
+        # free-running too.
         sampled = (np.asarray(self._prev_sampled)
                    if self.sched.eos_id is not None else None)
-        done = self.sched.commit(plan, sampled, self._step_idx)
+        if self.spec_decode:
+            row_reqs = {slot: self.sched.active[slot]
+                        for slot in plan.sample_slots}
+            if n_acc_dev is None:
+                # fast-path / prefill-only step: one token per sampled
+                # row, commit by count exactly like the plain engine
+                done = self.sched.commit(plan, sampled, self._step_idx)
+                for slot in plan.sample_slots:
+                    req = row_reqs[slot]
+                    if req.finish_reason:
+                        self.drafter.drop(req.rid)
+                        self._draft_stale.discard(req.rid)
+                    else:
+                        self._draft_stale.add(req.rid)
+            else:
+                accepted = self._spec_accepted(plan, n_acc_dev, acc_dev)
+                done = self.sched.commit(plan, sampled, self._step_idx,
+                                         accepted=accepted)
+                self._spec_feedback(plan, accepted, row_reqs)
+        else:
+            done = self.sched.commit(plan, sampled, self._step_idx)
         fl, by = self._cost.step_cost(plan.n_decode, plan.n_prefill_tokens)
         self.stats.model_flops += fl
         self.stats.model_bytes += by
@@ -811,7 +1123,9 @@ class ContinuousBatchingEngine:
         # away (victim re-prefills from token 0) come back off the total
         discarded = self.sched.discarded_tokens - self._seen_discarded
         self._seen_discarded = self.sched.discarded_tokens
-        self.stats.generated_tokens += len(plan.sample_slots) - discarded
+        committed = (sum(self.sched.last_commit_counts.values())
+                     if self.spec_decode else len(plan.sample_slots))
+        self.stats.generated_tokens += committed - discarded
         self.stats.prefix_hit_tokens = self.sched.prefix_hit_tokens
         self.stats.wall_s += dt
         self._step_idx += 1

@@ -73,6 +73,12 @@ class OpenLoopResult:
     queue_depth: List[Tuple[float, int]]
     engine_summary: Dict[str, Any]
     clock: str
+    # the ArrivalRequest records of every request that *finished* during
+    # the run, in rid order — ``arrivals.save_trace`` serializes them
+    # under the repro.serve.trace schema, so any open-loop run can be
+    # re-played deterministically (launch/serve.py --record-trace)
+    completed_arrivals: List[ArrivalRequest] = dataclasses.field(
+        default_factory=list)
 
     def summary(self, slo: Optional[SLO] = None) -> Dict[str, Any]:
         """The schema-valid ``latency`` block (slo.latency_summary)."""
@@ -130,16 +136,23 @@ class OpenLoopFrontend:
             req = live.get(rid)
             if req is not None:
                 ev.prefix_len = max(ev.prefix_len, req.prefix_len)
-        for _slot, rid in eng.last_sampled_rids:
+        counts = eng.sched.last_commit_counts
+        for slot, rid in eng.last_sampled_rids:
             ev = events.get(rid)
             req = live.get(rid)
             if ev is None or req is None:
                 continue
+            # a speculative step commits c >= 1 tokens at once; all c
+            # share this step's completion instant, producing c - 1 zero
+            # TBT gaps (the multi-token event contract — see serve/slo).
+            # Without speculation c == 1 and this is the classic append.
+            c = int(counts.get(slot, 1))
             # belt-and-braces against stale pre-preemption timestamps:
-            # this step's token is number ``req.n_generated`` (commit
-            # already ran), so exactly n_generated-1 earlier times stay
-            del ev.token_times_s[max(0, req.n_generated - 1):]
-            ev.token_times_s.append(t)
+            # this step committed tokens n_generated-c+1 .. n_generated
+            # (commit already ran), so exactly n_generated-c earlier
+            # times stay
+            del ev.token_times_s[max(0, req.n_generated - c):]
+            ev.token_times_s.extend([t] * c)
             ev.n_generated = req.n_generated
         for rid in [r for r, req in live.items() if req.finish_reason]:
             req = live.pop(rid)
@@ -157,6 +170,7 @@ class OpenLoopFrontend:
         eng = self.engine
         arr = sorted(arrivals, key=lambda a: a.arrival_s)
         events: Dict[int, RequestEvents] = {}
+        arecs: Dict[int, ArrivalRequest] = {}  # rid -> submitted arrival
         live: Dict[int, Any] = {}          # rid -> scheduler Request
         depth: List[Tuple[float, int]] = []
         t = start_s
@@ -178,6 +192,7 @@ class OpenLoopFrontend:
                                      extra=a.extra)
                     req = eng.sched.queue[-1]
                     assert req.rid == rid
+                    arecs[rid] = a
                     live[rid] = req
                     events[rid] = RequestEvents(
                         rid=rid, arrival_s=a.arrival_s, enqueue_s=t,
@@ -228,4 +243,7 @@ class OpenLoopFrontend:
             makespan_s=t - start_s,
             queue_depth=depth,
             engine_summary=eng.stats.summary(),
-            clock=self.clock)
+            clock=self.clock,
+            completed_arrivals=[
+                arecs[r] for r in sorted(arecs)
+                if events[r].finish_reason is not None])

@@ -6,7 +6,10 @@ the paged slot bookkeeping (``PagedKVCache``).  Each engine iteration asks
 for one ``StepPlan`` — a fixed-shape (n_slots, step_width) token batch
 composed of
 
-  * one decode token for every DECODING slot (column 0, ``n_valid = 1``),
+  * one decode token for every DECODING slot (column 0, ``n_valid = 1``)
+    — or, under speculative decoding (``spec_k > 0``), up to ``spec_k``
+    drafted continuation tokens riding in columns 1.. (``n_valid`` =
+    the fed width, pages reserved up front for all of it),
   * one chunk of at most ``prefill_chunk`` prompt tokens for a single
     PREFILLING slot (``n_valid = chunk``), and
   * ``n_valid = 0`` padding rows for idle slots,
@@ -119,12 +122,14 @@ class PrefillChunk:
 
 @dataclasses.dataclass
 class StepPlan:
-    """One engine step: a batched (n_slots, 1) decode for every in-flight
-    decode, plus bounded single-row prefill chunks.  Row r drives slot r
-    in the decode part."""
-    tokens: np.ndarray                 # (n_slots, 1) int32
-    n_valid: np.ndarray                # (n_slots,) int32 (0 or 1)
-    positions: np.ndarray              # (n_slots, 1) int32
+    """One engine step: a batched (n_slots, 1 + spec_k) decode for every
+    in-flight decode, plus bounded single-row prefill chunks.  Row r
+    drives slot r in the decode part.  Without speculation the decode
+    width is 1; with it, columns 1.. of a decode row hold the drafted
+    continuation and ``n_valid`` is the fed width (1 + draft length)."""
+    tokens: np.ndarray                 # (n_slots, 1 + spec_k) int32
+    n_valid: np.ndarray                # (n_slots,) int32 (0..1 + spec_k)
+    positions: np.ndarray              # (n_slots, 1 + spec_k) int32
     temperatures: np.ndarray           # (n_slots,) float32
     reset_mask: np.ndarray             # (n_slots,) bool — recycled this step
     token_src: np.ndarray              # (n_slots,) bool — the input token
@@ -154,9 +159,12 @@ class Scheduler:
     def __init__(self, kv: PagedKVCache, *, prefill_chunk: int = 8,
                  eos_id: Optional[int] = None,
                  chunk_policy: str = "fixed",
-                 tbt_target_s: Optional[float] = None):
+                 tbt_target_s: Optional[float] = None,
+                 spec_k: int = 0):
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         if chunk_policy not in CHUNK_POLICIES:
             raise ValueError(
                 f"chunk_policy {chunk_policy!r} not in {CHUNK_POLICIES}")
@@ -178,6 +186,17 @@ class Scheduler:
         self.tbt_target_s = tbt_target_s
         self._sec_per_token: Optional[float] = None
         self.last_chunk_width = prefill_chunk
+        # speculative decode width: decode rows carry up to ``spec_k``
+        # drafted tokens after the real input token; the plan reserves
+        # pages for the FULL fed width up front (grow before execute), so
+        # acceptance can never hit a failing mid-step allocation — the
+        # unaccepted tail is returned via ``PagedKVCache.shrink`` at
+        # commit.  spec_k == 0 composes the exact unspeculative plan.
+        self.spec_k = spec_k
+        # slot -> tokens committed by the most recent commit() (1 for
+        # every sampled row without speculation); the engine's telemetry
+        # and the open-loop frontend's multi-token TBT events read this
+        self.last_commit_counts: Dict[int, int] = {}
         self.eos_id = eos_id
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}       # slot -> request
@@ -401,20 +420,52 @@ class Scheduler:
             w //= 2
         return w
 
-    def next_plan(self, step: int) -> Optional[StepPlan]:
-        """Compose the next mixed step, or None when nothing is runnable."""
+    def next_plan(self, step: int,
+                  drafts: Optional[Dict[int, np.ndarray]] = None
+                  ) -> Optional[StepPlan]:
+        """Compose the next mixed step, or None when nothing is runnable.
+
+        ``drafts`` (speculative decoding, ``spec_k > 0``) maps decode
+        slots to proposed continuation tokens; a slot's fed width is
+        ``1 + len(draft)`` capped by ``spec_k``, by the tokens the
+        request may still commit, and by the page budget.  Pages for the
+        full fed width are reserved here, before execution — under page
+        pressure the draft degrades to the plain one-token row *before*
+        anyone is preempted, so speculation never evicts a request the
+        unspeculative scheduler would have kept."""
         reset_slots = set(self._admit(step))
         self._fresh_slots = set(reset_slots)
 
-        # decode rows: ensure each decoding slot can grow by one token;
-        # on page exhaustion preempt the youngest other request (younger
-        # slots are dropped before older ones ever stall)
+        # decode rows: ensure each decoding slot can grow by its fed
+        # width; on page exhaustion degrade the draft, then preempt the
+        # youngest other request (younger slots are dropped before older
+        # ones ever stall)
         decode_slots: List[int] = []
+        fed: Dict[int, np.ndarray] = {}    # slot -> draft tokens fed
+        empty_draft = np.zeros((0,), np.int32)
         for slot in list(self._admission_order):
             req = self.active.get(slot)
             if req is None or req.state is not RequestState.DECODING:
                 continue
-            ok = self.kv.grow(slot, 1)
+            draft = empty_draft
+            if self.spec_k and drafts and req.temperature == 0:
+                d = drafts.get(slot)
+                if d is not None:
+                    draft = np.asarray(d, np.int32).reshape(-1)
+                    # never feed tokens the request cannot commit: the
+                    # fed width is bounded by the generation budget and
+                    # by the slot's remaining capacity
+                    room = min(
+                        req.max_new_tokens - req.n_generated,
+                        self.kv.max_len
+                        - (req.prompt_len + req.n_generated) + 1)
+                    draft = draft[:max(0, min(self.spec_k, room - 1))]
+            want = 1 + len(draft)
+            ok = self.kv.grow(slot, want)
+            if not ok and want > 1:
+                draft = empty_draft
+                want = 1
+                ok = self.kv.grow(slot, 1)
             while not ok and self.kv.length(slot) < self.kv.max_len:
                 if self._preempt_youngest(
                         younger_than=slot,
@@ -423,6 +474,7 @@ class Scheduler:
                 ok = self.kv.grow(slot, 1)
             if ok:
                 decode_slots.append(slot)
+                fed[slot] = draft
             # else: the request waits this step, slot stays allocated
 
         # prefill chunks: EVERY prefilling slot advances by up to
@@ -476,9 +528,10 @@ class Scheduler:
             return None
 
         n = self.kv.n_slots
-        tokens = np.zeros((n, 1), np.int32)
+        width_s = 1 + self.spec_k
+        tokens = np.zeros((n, width_s), np.int32)
         n_valid = np.zeros((n,), np.int32)
-        positions = np.zeros((n, 1), np.int32)
+        positions = np.zeros((n, width_s), np.int32)
         temps = np.zeros((n,), np.float32)
         reset = np.zeros((n,), bool)
         token_src = np.zeros((n,), bool)
@@ -491,10 +544,16 @@ class Scheduler:
         for slot in decode_slots:
             req = self.active[slot]
             # the input token is the previous sample for this slot — it
-            # lives on device; the engine splices it in (token_src)
+            # lives on device; the engine splices it in (token_src).
+            # Draft tokens (if any) ride in columns 1..n_fed-1.
             token_src[slot] = True
-            positions[slot, 0] = req.prompt_len + req.n_generated - 1
-            n_valid[slot] = 1
+            draft = fed[slot]
+            n_fed = 1 + len(draft)
+            p0 = req.prompt_len + req.n_generated - 1
+            positions[slot, :n_fed] = p0 + np.arange(n_fed, dtype=np.int32)
+            if n_fed > 1:
+                tokens[slot, 1:n_fed] = draft
+            n_valid[slot] = n_fed
             temps[slot] = req.temperature
             out_idx[slot] = req.n_generated
             sample_slots.append(slot)
@@ -509,15 +568,27 @@ class Scheduler:
 
     # -- commit ---------------------------------------------------------
     def commit(self, plan: StepPlan, sampled: Optional[np.ndarray],
-               step: int) -> List[Request]:
+               step: int,
+               accepted: Optional[Dict[int, np.ndarray]] = None
+               ) -> List[Request]:
         """Apply one step's results; returns requests finished this step.
 
         ``sampled`` (the host copy of this step's samples) is only
         required when EOS detection is on; count-based finishing works
         without ever reading token values (the engine keeps them on
         device until a request completes).
+
+        ``accepted`` (speculative decoding) maps every sampled slot to
+        the token values the verify step committed (1..n_fed of them).
+        Each decode row commits its accepted count, EOS-truncated, and
+        the unaccepted tail of the row's up-front page reserve is
+        returned via ``PagedKVCache.shrink``.  A count outside the
+        plan's reserve raises loudly — by construction (grow-up-front)
+        acceptance can never need a mid-step allocation, so an
+        out-of-reserve commit is a scheduler/engine contract violation,
+        not a recoverable page fault.
         """
-        if self.eos_id is not None and sampled is None:
+        if accepted is None and self.eos_id is not None and sampled is None:
             raise ValueError("eos_id set but no sampled tokens provided")
         for slot, chunk in plan.prefill_chunks.items():
             req = self.active[slot]
@@ -525,18 +596,48 @@ class Scheduler:
             if req.prompt_done:
                 req.state = RequestState.DECODING
         done: List[Request] = []
+        self.last_commit_counts = {}
         for slot in plan.sample_slots:
             req = self.active[slot]
-            req.n_generated += 1
-            if req.n_generated == 1:
+            if accepted is None:
+                n_commit = 1
+                eos_hit = (self.eos_id is not None
+                           and int(sampled[slot]) == self.eos_id)
+            else:
+                toks = np.asarray(accepted[slot]).reshape(-1)
+                reserve = (int(plan.n_valid[slot]) if plan.token_src[slot]
+                           else 1)
+                if not 1 <= len(toks) <= reserve:
+                    raise RuntimeError(
+                        f"slot {slot}: committed {len(toks)} token(s) "
+                        f"against a {reserve}-token page reserve — "
+                        "acceptance must never outrun the plan's "
+                        "up-front grow")
+                eos_hit = False
+                if self.eos_id is not None:
+                    hits = np.nonzero(toks == self.eos_id)[0]
+                    if len(hits):
+                        toks = toks[:int(hits[0]) + 1]
+                        eos_hit = True
+                n_commit = len(toks)
+            first = req.n_generated == 0
+            req.n_generated += n_commit
+            if first:
                 req.first_token_step = step
-            if (self.eos_id is not None
-                    and int(sampled[slot]) == self.eos_id):
+            if eos_hit:
                 req.finish_reason = "eos"
             elif req.n_generated >= req.max_new_tokens:
                 req.finish_reason = "max_new_tokens"
             elif req.prompt_len + req.n_generated >= self.kv.max_len:
                 req.finish_reason = "max_len"
+            if (accepted is not None and plan.token_src[slot]
+                    and not req.finish_reason):
+                # hand the unaccepted tail of the reserve back (a
+                # finishing slot is released wholesale just below)
+                unused = int(plan.n_valid[slot]) - n_commit
+                if unused:
+                    self.kv.shrink(slot, unused)
+            self.last_commit_counts[slot] = n_commit
             if req.finish_reason:
                 req.state = RequestState.FINISHED
                 req.finish_step = step

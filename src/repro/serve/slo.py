@@ -54,7 +54,16 @@ class SLO:
 @dataclasses.dataclass
 class RequestEvents:
     """Virtual-clock event record of one open-loop request (seconds
-    from the start of the frontend run)."""
+    from the start of the frontend run).
+
+    Multi-token (speculative) steps append one entry per committed
+    token to ``token_times_s``, all stamped with the same step
+    completion instant: a step that verifies and commits ``c`` tokens
+    contributes ``c - 1`` zero-width TBT gaps plus one real gap back to
+    the row's previous step.  ``max_tbt_s`` / percentile TBT therefore
+    measure what a streaming client would see — tokens arriving in
+    bursts with the inter-burst gap as the worst case — and throughput
+    metrics count committed tokens, never steps."""
     rid: int
     arrival_s: float                    # generator's arrival time
     enqueue_s: float                    # when the frontend submitted it

@@ -19,6 +19,7 @@ SERVE_TEST_MODULES = (
     "test_serve_frontend",
     "test_serve_prefix",
     "test_serve_sharded",
+    "test_serve_spec",
     "test_spkv_decode",
 )
 

@@ -661,6 +661,11 @@ def test_committed_baselines_cover_every_pinned_target():
     assert paged["gather_ops"] == 0 and paged["alias_pairs"] > 0
     xla = diff.load_baselines()["serve.decode_step.xla"]
     assert xla["gather_ops"] > 0       # the twin keeps the gather visible
+    # the speculative verify step must stay gather-free too: acceptance
+    # uses cumprod/one-hot reductions and the ragged commit a drop-mode
+    # scatter, never a take_along_axis gather
+    spec = diff.load_baselines()["serve.decode_step.spec"]
+    assert spec["gather_ops"] == 0 and spec["alias_pairs"] > 0
 
 
 # ---------------------------------------------------------------------------
